@@ -1,0 +1,49 @@
+"""Table 1: collection statistics — size n, RLCSA size, documents d,
+average document size, pattern count, occ, df, occ/df."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_collections, emit, patterns_for, suffix_data_for
+
+
+def run():
+    rows = []
+    for name, coll in bench_collections().items():
+        data = suffix_data_for(name)
+        from repro.core.csa import build_csa
+
+        csa = build_csa(data)
+        pats, ranges = patterns_for(name)
+        occs, dfs = [], []
+        for lo, hi in ranges:
+            occ = int(hi - lo)
+            if occ == 0:
+                continue
+            occs.append(occ)
+            dfs.append(len(set(data.da[lo:hi].tolist())))
+        occ = float(np.mean(occs)) if occs else 0.0
+        df = float(np.mean(dfs)) if dfs else 0.0
+        rows.append(
+            [
+                name,
+                coll.n,
+                round(csa.modeled_bits_rlcsa() / 8 / 2**10, 2),  # KB
+                coll.d,
+                coll.n // max(coll.d, 1),
+                len(pats),
+                round(occ, 1),
+                round(df, 1),
+                round(occ / max(df, 1e-9), 2),
+            ]
+        )
+    return emit(
+        rows,
+        ["collection", "n", "rlcsa_kb", "d", "avg_doc", "patterns", "occ",
+         "df", "occ_per_df"],
+    )
+
+
+if __name__ == "__main__":
+    run()

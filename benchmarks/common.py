@@ -1,0 +1,81 @@
+"""Shared benchmark plumbing: collection cache, timers, CSV emission.
+
+All document-retrieval benchmarks follow the paper's protocol (Section
+6.2.1): query timing starts from precomputed lexicographic ranges [lo, hi)
+(range-finding time is reported separately), space is reported in bits per
+character using the modeled compressed sizes, and each (structure,
+collection) pair emits one CSV row.
+
+Scale note: this container is a CPU machine; collections are scaled down
+from the paper's 100 MB-1 GB to ~100 KB-1 MB (the ``SCALE`` env var adjusts)
+— the *relative* space/time trade-offs the paper studies are preserved, and
+the repetitiveness parameters (d, mutation rates) match Section 6.1.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+_CACHE: dict = {}
+
+
+def bench_collections():
+    from repro.data.collections import generate, paperlike_collections
+
+    if "colls" not in _CACHE:
+        specs = paperlike_collections(scale=SCALE)
+        _CACHE["colls"] = {name: generate(spec) for name, spec in specs.items()}
+    return _CACHE["colls"]
+
+
+def suffix_data_for(name: str):
+    from repro.core.suffix import build_suffix_data
+
+    key = f"sd:{name}"
+    if key not in _CACHE:
+        _CACHE[key] = build_suffix_data(bench_collections()[name])
+    return _CACHE[key]
+
+
+def patterns_for(name: str, n: int = 64, length: int = 7):
+    from repro.core.suffix import sa_range_for_pattern
+    from repro.data.collections import random_substring_patterns
+
+    key = f"pat:{name}:{n}:{length}"
+    if key not in _CACHE:
+        coll = bench_collections()[name]
+        pats = random_substring_patterns(coll, 4 * n, length, n)
+        data = suffix_data_for(name)
+        ranges = np.asarray(
+            [sa_range_for_pattern(data, p) for p in pats], dtype=np.int32
+        ).reshape(-1, 2)
+        _CACHE[key] = (pats, ranges)
+    return _CACHE[key]
+
+
+def time_batched(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of a jitted batched call, excluding compilation."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for row in rows:
+        print(",".join(str(x) for x in row))
+    print()
+    return rows

@@ -1,0 +1,58 @@
+"""Fig 10: document counting — time vs bits/char for the Sadakane encoding
+family (plain / RR / S / S-S / F-P) and ILCP counting."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_collections, emit, patterns_for, suffix_data_for, time_batched
+from repro.core.ilcp import build_ilcp, ilcp_count_docs_batch
+from repro.core.sada import VARIANTS, build_sada, sada_count_batch
+
+
+def run(collections=("dna-p001", "version-p001", "version-p01", "random")):
+    rows = []
+    for name in collections:
+        coll = bench_collections()[name]
+        data = suffix_data_for(name)
+        pats, ranges = patterns_for(name)
+        nz = ranges[:, 1] > ranges[:, 0]
+        ranges = ranges[nz]
+        if not len(ranges):
+            continue
+        lo = jnp.asarray(ranges[:, 0])
+        hi = jnp.asarray(ranges[:, 1])
+        lens = jnp.asarray([len(p) for p, keep in zip(pats, nz) if keep], jnp.int32)
+        n = coll.n
+
+        expected = None
+        for variant in VARIANTS:
+            s = build_sada(data, variant)
+            fn = jax.jit(lambda a, b: sada_count_batch(s, a, b))
+            t, out = time_batched(fn, lo, hi)
+            if expected is None:
+                expected = np.asarray(out)
+            else:
+                np.testing.assert_array_equal(np.asarray(out), expected)
+            rows.append(
+                [name, f"Sada-{variant}", len(ranges),
+                 round(s.modeled_bits() / n, 3),
+                 round(t * 1e6 / len(ranges), 2)]
+            )
+        ilcp = build_ilcp(data)
+        fn = jax.jit(lambda a, b, m: ilcp_count_docs_batch(ilcp, a, b, m))
+        t, out = time_batched(fn, lo, hi, lens)
+        np.testing.assert_array_equal(np.asarray(out), expected)
+        rows.append(
+            [name, "ILCP", len(ranges),
+             round(ilcp.modeled_bits_counting() / n, 3),
+             round(t * 1e6 / len(ranges), 2)]
+        )
+    return emit(rows, ["collection", "index", "queries", "bits_per_char",
+                       "us_per_query"])
+
+
+if __name__ == "__main__":
+    run()

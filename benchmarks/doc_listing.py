@@ -1,0 +1,94 @@
+"""Figures 6-8: document listing — time per query vs index bits/char.
+
+Indexes (Section 6.2.1): Brute-L, Brute-D, Sada-C-D, Sada-I-D (ILCP),
+Sada-I-L, PDL.  Query time excludes range finding, as in the paper; space
+is the modeled compressed size of the *listing structure* (the CSA is
+reported separately by collection_stats)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (
+    bench_collections, emit, patterns_for, suffix_data_for, time_batched,
+)
+from repro.core.csa import build_csa
+from repro.core.ilcp import build_ilcp, ilcp_list_docs_csa, ilcp_list_docs_da
+from repro.core.listing import brute_list_csa, brute_list_da, sada_c_list_docs_da
+from repro.core.pdl import build_pdl, pdl_list_docs
+from repro.core.wtlist import build_da_wavelet, wt_list_docs, wt_modeled_bits
+from repro.succinct.rmq import rmq_build
+from repro.common import ceil_log2
+
+
+def run(collections=("dna-p001", "dna-p03", "version-p001", "random")):
+    rows = []
+    for name in collections:
+        coll = bench_collections()[name]
+        data = suffix_data_for(name)
+        csa = build_csa(data)
+        ilcp = build_ilcp(data)
+        pdl = build_pdl(data, block_size=64, beta=16.0, mode="list")
+        rmq_c = rmq_build(data.c)
+        da = jnp.asarray(data.da)
+        da_wm = build_da_wavelet(data.da, coll.d)
+        pats, ranges = patterns_for(name)
+        nz = ranges[:, 1] > ranges[:, 0]
+        ranges = ranges[nz]
+        if not len(ranges):
+            continue
+        lo = jnp.asarray(ranges[:, 0])
+        hi = jnp.asarray(ranges[:, 1])
+        max_df = coll.d + 1
+        max_occ = min(int((ranges[:, 1] - ranges[:, 0]).max()), 8192)
+        n = coll.n
+        total_df = sum(
+            len(set(data.da[a:b].tolist())) for a, b in ranges
+        )
+
+        da_bits = n * max(1, ceil_log2(coll.d))
+        engines = {
+            "Brute-L": (
+                jax.jit(jax.vmap(lambda a, b: brute_list_csa(csa, a, b, max_occ, max_df)[:2])),
+                0,
+            ),
+            "Brute-D": (
+                jax.jit(jax.vmap(lambda a, b: brute_list_da(da, a, b, max_occ, max_df)[:2])),
+                da_bits,
+            ),
+            "Sada-C-D": (
+                jax.jit(jax.vmap(lambda a, b: sada_c_list_docs_da(rmq_c, da, a, b, coll.d, max_df))),
+                da_bits + 2 * n,
+            ),
+            "Sada-I-D": (
+                jax.jit(jax.vmap(lambda a, b: ilcp_list_docs_da(ilcp, da, a, b, max_df))),
+                da_bits + ilcp.modeled_bits_listing(),
+            ),
+            "Sada-I-L": (
+                jax.jit(jax.vmap(lambda a, b: ilcp_list_docs_csa(ilcp, csa, a, b, max_df))),
+                ilcp.modeled_bits_listing(),
+            ),
+            "PDL": (
+                jax.jit(jax.vmap(lambda a, b: pdl_list_docs(pdl, csa, a, b, max_df, max_buf=2048))),
+                pdl.modeled_bits(),
+            ),
+            "WT": (
+                jax.jit(jax.vmap(lambda a, b: wt_list_docs(da_wm, a, b, max_df)[::2])),
+                wt_modeled_bits(da_wm),
+            ),
+        }
+        for ename, (fn, bits) in engines.items():
+            t, out = time_batched(fn, lo, hi)
+            us_per_doc = t * 1e6 / max(total_df, 1)
+            rows.append(
+                [name, ename, len(ranges), round(bits / n, 3),
+                 round(t * 1e3, 2), round(us_per_doc, 2)]
+            )
+    return emit(rows, ["collection", "index", "queries", "bits_per_char",
+                       "batch_ms", "us_per_result"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Roofline table from the dry-run JSONs (experiments/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms in seconds, dominant term,
+MODEL_FLOPS, analytic FLOPs, useful ratio, per-device memory."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_results(root="experiments/dryrun"):
+    results = []
+    for path in sorted(glob.glob(os.path.join(root, "*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        results.extend(data.get("results", []))
+    return results
+
+
+def run(root="experiments/dryrun"):
+    results = load_results(root)
+    if not results:
+        print("no dry-run results found — run experiments/run_dryrun.sh first")
+        return []
+    rows = []
+    for r in results:
+        rl = r["roofline"]
+        rows.append(
+            [
+                r["arch"],
+                r["shape"],
+                r["mesh"],
+                f"{rl['compute_s']:.3e}",
+                f"{rl['memory_s']:.3e}",
+                f"{rl['collective_s']:.3e}",
+                rl["dominant"],
+                f"{rl['model_flops']:.3e}",
+                f"{rl['useful_ratio']:.2f}",
+                r["memory"]["temp_mb"],
+                r["memory"].get("analytic_device_mb"),
+            ]
+        )
+    return emit(
+        rows,
+        ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+         "dominant", "model_flops", "useful_ratio", "cpu_temp_mb",
+         "analytic_dev_mb"],
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Fig 5: runs of 1-bits in Sadakane's H' bitvector on synthetic DNA
+collections vs mutation rate, against the expected-case bound of
+Section 5.3 ((sigma/2 + 1) * m * sqrt(d))."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SCALE, emit
+from repro.core.sada import hprime_runs_of_ones
+from repro.core.suffix import build_suffix_data
+from repro.data.collections import SyntheticSpec, generate
+
+
+def run():
+    rows = []
+    m = max(2, int(128 * SCALE))       # base document length
+    d = max(2, int(64 * SCALE))        # number of documents
+    sigma = 4
+    bound = (sigma / 2 + 1) * m * np.sqrt(d)
+    for p in (0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0):
+        spec = SyntheticSpec("dna", n_base=1, n_variants=d, base_len=m,
+                             mutation_rate=p)
+        coll = generate(spec)
+        data = build_suffix_data(coll)
+        runs = hprime_runs_of_ones(data)
+        rows.append([p, coll.n, runs, round(runs / coll.n, 4), round(bound, 1)])
+    return emit(rows, ["mutation_rate", "n", "h_runs", "runs_per_char",
+                       "expected_bound_p1"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Table 2: ranked multi-term AND/OR queries per second (single stream and
+batched — batching is the TPU analogue of the paper's query threads)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import bench_collections, emit, patterns_for, suffix_data_for
+from repro.serve.retrieval import RetrievalService
+
+
+def run(name="version-p001", n_queries=16, ks=(10, 100)):
+    coll = bench_collections()[name]
+    svc = RetrievalService.build(coll, block_size=64)
+    pats, ranges = patterns_for(name, n=32, length=5)
+    pats = [p for p, (lo, hi) in zip(pats, ranges) if hi > lo][:8]
+    if len(pats) < 2:
+        return []
+    rng = np.random.default_rng(3)
+    queries = [
+        [pats[i] for i in rng.choice(len(pats), 2, replace=False)]
+        for _ in range(n_queries)
+    ]
+    rows = []
+    for conj in (True, False):
+        for k in ks:
+            # warm
+            svc.tfidf(queries[:2], k=k, conjunctive=conj)
+            t0 = time.perf_counter()
+            out = svc.tfidf(queries, k=k, conjunctive=conj)
+            dt = time.perf_counter() - t0
+            qps = n_queries / dt
+            rows.append(
+                ["Ranked-AND" if conj else "Ranked-OR", k, n_queries,
+                 round(qps, 1), round(dt * 1e3 / n_queries, 2)]
+            )
+    return emit(rows, ["query_type", "k", "queries", "qps", "ms_per_query"])
+
+
+if __name__ == "__main__":
+    run()

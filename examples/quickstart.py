@@ -1,0 +1,58 @@
+"""Quickstart: build a document-retrieval index over a repetitive
+collection and run the paper's three query types plus TF-IDF.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.suffix import concat_documents
+from repro.data.collections import SyntheticSpec, generate
+from repro.serve.retrieval import RetrievalService
+from repro.core.suffix import encode_pattern
+
+
+def main():
+    # a versioned collection: 20 near-identical revisions of 5 base docs
+    coll = generate(
+        SyntheticSpec("version", n_base=5, n_variants=20, base_len=300,
+                      mutation_rate=0.005, sigma="acgt")
+    )
+    print(f"collection: n={coll.n} symbols, d={coll.d} documents")
+
+    svc = RetrievalService.build(coll, block_size=32, beta=8.0)
+    report = svc.space_report()
+    print("\nindex space (bits/char):")
+    for k, v in report.items():
+        print(f"  {k:22s} {v if isinstance(v, int) else round(v, 3)}")
+
+    # take a few patterns straight out of the text
+    text = coll.text
+    pats = []
+    rng = np.random.default_rng(0)
+    while len(pats) < 4:
+        p = int(rng.integers(0, coll.n - 6))
+        sub = text[p : p + 5]
+        if (sub > 0).all():
+            pats.append(np.asarray(sub - 1, dtype=np.int32) + 1)
+
+    print("\ndocument counting (df):", svc.count(pats).tolist())
+    print("counting cross-check  :", svc.count_ilcp(pats).tolist())
+
+    listing = svc.list_docs(pats, max_df=coll.d + 1)
+    print("\ndocument listing:")
+    for i, docs in enumerate(listing):
+        print(f"  pattern {i}: {len(docs)} docs -> {docs[:10]}{'...' if len(docs) > 10 else ''}")
+
+    print("\ntop-5 by term frequency:")
+    for i, hits in enumerate(svc.topk(pats, k=5)):
+        print(f"  pattern {i}: {hits}")
+
+    print("\nranked-OR tf-idf (2-term queries):")
+    out = svc.tfidf([[pats[0], pats[1]], [pats[2], pats[3]]], k=5)
+    for i, hits in enumerate(out):
+        print(f"  query {i}: {[(d, round(s, 2)) for d, s in hits]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Assigned architecture configs (one module per arch) + cell registry.
+
+``repro.configs.registry`` maps (arch_id, shape_id, mesh) to a CellSpec:
+the jit-able step function, abstract (ShapeDtypeStruct) inputs, partition
+specs, and roofline metadata.  The dry-run and benchmarks consume cells.
+"""
+
+from repro.configs.registry import (
+    ALL_ARCHS,
+    ARCH_SHAPES,
+    CellSpec,
+    all_cells,
+    build_cell,
+    get_arch_module,
+)
+
+__all__ = [
+    "ALL_ARCHS",
+    "ARCH_SHAPES",
+    "CellSpec",
+    "all_cells",
+    "build_cell",
+    "get_arch_module",
+]

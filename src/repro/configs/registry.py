@@ -1,0 +1,659 @@
+"""Cell registry: (architecture x input-shape) -> CellSpec.
+
+A *cell* is one entry of the 40-cell dry-run/roofline matrix: a step
+function (train / prefill / decode / serve / retrieval), abstract
+ShapeDtypeStruct inputs (never allocated), partition specs for the given
+mesh, and roofline metadata (analytic FLOPs/bytes models + scan trip
+multipliers for HLO collective accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    MeshAxes,
+    axes_for_mesh,
+    dp_size,
+    lm_batch_specs,
+    lm_cache_specs,
+    lm_param_specs,
+    nequip_batch_specs,
+    opt_state_specs,
+    recsys_param_specs,
+)
+from repro.models import nequip as nequip_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import AdamWConfig, abstract_opt_state, adamw_update
+
+_ARCH_MODULES = {
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "nequip": "repro.configs.nequip",
+    "fm": "repro.configs.fm",
+    "sasrec": "repro.configs.sasrec",
+    "autoint": "repro.configs.autoint",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+}
+
+ALL_ARCHS = tuple(_ARCH_MODULES)
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# GNN shapes: sizes padded up to multiples of 512 (and of 512 * edge_chunks)
+# so every array dim shards evenly on both meshes; padding is a data-
+# pipeline responsibility (dummy isolated nodes / self-loop edges).
+GNN_SHAPES = {
+    "full_graph_sm": dict(
+        kind="train", n_nodes=2708, n_edges=10556, d_feat=1433,
+        n_graphs=1, edge_chunks=1, shard=False,
+    ),
+    "minibatch_lg": dict(
+        kind="train", n_nodes=169_984, n_edges=169_984, d_feat=602,
+        n_graphs=1, edge_chunks=4, shard=True, partitioned=True,
+        note="1024 seeds x fanout 15-10, padded from 168,960 edges",
+    ),
+    "ogb_products": dict(
+        kind="train", n_nodes=2_449_408, n_edges=61_865_984, d_feat=100,
+        n_graphs=1, edge_chunks=8, shard=True, partitioned=True,
+        note="padded from 2,449,029 nodes / 61,859,140 edges",
+    ),
+    "molecule": dict(
+        kind="train", n_nodes=3840, n_edges=8192, d_feat=32,
+        n_graphs=128, edge_chunks=1, shard=True,
+    ),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+ARCH_SHAPES = {
+    arch: (
+        tuple(LM_SHAPES)
+        if importlib.import_module(m).FAMILY == "lm"
+        else tuple(GNN_SHAPES)
+        if importlib.import_module(m).FAMILY == "gnn"
+        else tuple(RECSYS_SHAPES)
+    )
+    for arch, m in _ARCH_MODULES.items()
+}
+
+
+def get_arch_module(arch_id: str):
+    return importlib.import_module(_ARCH_MODULES[arch_id])
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    abstract_args: tuple
+    in_specs: tuple
+    out_specs: Any
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _maybe_axes(n: int, mesh, axes_tuple):
+    """The largest prefix of axes whose product divides n (else None)."""
+    prod = 1
+    usable = []
+    for a in axes_tuple:
+        prod *= mesh.shape[a]
+        if n % prod == 0:
+            usable.append(a)
+        else:
+            break
+    if not usable:
+        return None
+    return tuple(usable) if len(usable) > 1 else usable[0]
+
+
+# ===========================================================================
+# LM cells
+# ===========================================================================
+
+
+def _lm_attn_flops_per_layer_fwd(cfg, B, S, local: bool):
+    s_eff = min(cfg.local_chunk, S) if local else S
+    return 4.0 * B * S * s_eff * cfg.n_heads * cfg.head_dim
+
+
+def _lm_meta(cfg: tf_mod.LMConfig, kind: str, B: int, S: int):
+    n_act = cfg.active_param_count()
+    n_tot = cfg.param_count()
+    T = B * S
+    n_local = len(cfg.local_positions) * cfg.n_groups
+    n_global = cfg.n_layers - n_local
+    attn_fwd = n_local * _lm_attn_flops_per_layer_fwd(cfg, B, S, True) + (
+        n_global * _lm_attn_flops_per_layer_fwd(cfg, B, S, False)
+    )
+    wb = jnp.dtype(cfg.param_dtype).itemsize
+    cache_bytes = (
+        cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2  # bf16 k+v
+    )
+    if kind == "train":
+        model_flops = 6.0 * n_act * T
+        # fwd + bwd + full-remat recompute = 4x fwd matmul flops
+        analytic_flops = 8.0 * n_act * T + 4.0 * attn_fwd
+        analytic_bytes = (
+            n_tot * (wb * 2 + 4 + 4)        # params r/w, grad, opt moments
+            + T * cfg.d_model * cfg.n_layers * 12 * 2  # activation traffic
+        )
+    elif kind == "prefill":
+        model_flops = 2.0 * n_act * T
+        analytic_flops = 2.0 * n_act * T + attn_fwd
+        analytic_bytes = n_tot * wb + cache_bytes + T * cfg.d_model * cfg.n_layers * 6 * 2
+    else:  # decode
+        model_flops = 2.0 * n_act * B
+        # decode MoE computes all experts for the live tokens
+        n_dec = n_tot if cfg.moe else n_act
+        attn_dec = 4.0 * B * S * cfg.n_heads * cfg.head_dim * cfg.n_layers
+        model_flops = 2.0 * n_act * B
+        analytic_flops = 2.0 * n_dec * B + attn_dec
+        analytic_bytes = n_dec * wb + cache_bytes
+    return dict(
+        model_flops=float(model_flops),
+        analytic_flops=float(analytic_flops),
+        analytic_bytes=float(analytic_bytes),
+        scan_trips=cfg.n_groups,
+        params_total=n_tot,
+        params_active=n_act,
+        tokens=T if kind != "decode" else B,
+    )
+
+
+def _lm_cell(arch_id, mod, shape_id, mesh, reduced):
+    cfg = mod.reduced_config() if reduced else mod.config()
+    axes = axes_for_mesh(mesh)
+    info = LM_SHAPES[shape_id]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+
+    opt_dtype = jnp.bfloat16 if getattr(mod, "OPT_MOMENT_DTYPE", "") == "bfloat16" else jnp.float32
+    opt_cfg = AdamWConfig(moment_dtype=opt_dtype)
+
+    params_abs = tf_mod.abstract_params(cfg)
+    pspecs = lm_param_specs(cfg, axes, mesh, params_abs)
+
+    # FSDP / 2-D TP: when TP-only sharding leaves more than ~2 GB of
+    # parameters per device, shard every weight over the data axes too
+    # (expert weights all-gather inside the shard_map EP block; dense
+    # weights get GSPMD-inserted gathers or partial-sum matmuls).
+    from repro.dist.sharding import zero_spec_for
+
+    wb = jnp.dtype(cfg.param_dtype).itemsize
+    mdl_size = mesh.shape[axes.mdl]
+    needs_fsdp = cfg.param_count() * wb / mdl_size > 2 * 2**30
+    if needs_fsdp:
+        dpn = dp_size(mesh, axes)
+
+        def extend(path, spec, ab):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name == "router":      # stays replicated for shard_map EP
+                return spec
+            return zero_spec_for(spec, ab.shape, axes, dpn)
+
+        pspecs = jax.tree_util.tree_map_with_path(
+            extend, pspecs, params_abs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # attach the mesh for sharding constraints (sequence-parallel residual
+    # carries, context-parallel attention) and shard_map EP on MoE archs
+    if kind in ("train", "prefill"):
+        cfg = dataclasses.replace(
+            cfg, ep_mesh=mesh, ep_dp_axes=tuple(axes.dp), ep_fsdp=needs_fsdp
+        )
+
+    if kind == "train":
+        opt_abs = abstract_opt_state(params_abs, opt_cfg)
+        ospecs = opt_state_specs(pspecs, params_abs, axes, dp_size(mesh, axes))
+        batch_abs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        bspecs = lm_batch_specs(axes)
+
+        def step(params, opt_state, batch):
+            def loss_fn(p):
+                return tf_mod.forward_train(cfg, p, batch["tokens"], batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_params, new_opt, loss
+
+        return CellSpec(
+            arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            meta=_lm_meta(cfg, kind, B, S),
+        )
+
+    if kind == "prefill":
+        tokens_abs = _sds((B, S), jnp.int32)
+        cspecs = lm_cache_specs(cfg, axes, B, mesh)
+
+        def step(params, tokens):
+            return tf_mod.forward_prefill(cfg, params, tokens)
+
+        logits_spec = P(_maybe_axes(B, mesh, axes.dp), axes.mdl)
+        return CellSpec(
+            arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+            abstract_args=(params_abs, tokens_abs),
+            in_specs=(pspecs, P(axes.dp, None)),
+            out_specs=(logits_spec, cspecs),
+            meta=_lm_meta(cfg, kind, B, S),
+        )
+
+    # decode
+    cache_abs = tf_mod.abstract_cache(cfg, B, S)
+    cspecs = lm_cache_specs(cfg, axes, B, mesh)
+    token_spec = P(_maybe_axes(B, mesh, axes.dp))
+    logits_spec = P(_maybe_axes(B, mesh, axes.dp), axes.mdl)
+
+    def step(params, token, cache, t):
+        return tf_mod.forward_decode(cfg, params, token, cache, t)
+
+    return CellSpec(
+        arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+        abstract_args=(
+            params_abs, _sds((B,), jnp.int32), cache_abs, _sds((), jnp.int32),
+        ),
+        in_specs=(pspecs, token_spec, cspecs, P()),
+        out_specs=(logits_spec, cspecs),
+        meta=_lm_meta(cfg, kind, B, S),
+    )
+
+
+# ===========================================================================
+# GNN cells
+# ===========================================================================
+
+
+def _gnn_meta(cfg, info):
+    N, E = info["n_nodes"], info["n_edges"]
+    C = cfg.channels
+    L = cfg.n_layers
+    # per edge: radial MLP + ~10 tensor-product paths over (C, <=9) comps
+    per_edge = 2 * (cfg.n_rbf * cfg.radial_hidden + cfg.radial_hidden * cfg.n_paths * C) + 140 * C
+    # per node: 6 channel mixes over (1 + 3 + 9) components + gates
+    per_node = 2 * C * C * 26 + 4 * C * C
+    fwd = L * (E * per_edge + N * per_node) + 2 * N * cfg.d_feat_in * C
+    model_flops = 3.0 * fwd  # fwd + bwd
+    analytic_flops = 4.0 * fwd  # + remat-free but scan recompute margin
+    msg_bytes = E * C * 13 * 4  # one chunk pass writes/read messages
+    analytic_bytes = L * (2 * msg_bytes + N * C * 13 * 4 * 4)
+    return dict(
+        model_flops=float(model_flops),
+        analytic_flops=float(analytic_flops),
+        analytic_bytes=float(analytic_bytes),
+        scan_trips=info["edge_chunks"],
+        params_total=sum(
+            int(np.prod(l.shape))
+            for l in jax.tree.leaves(nequip_mod.abstract_params(cfg))
+        ),
+        params_active=0,
+        tokens=N,
+    )
+
+
+def _gnn_cell(arch_id, mod, shape_id, mesh, reduced):
+    info = GNN_SHAPES[shape_id]
+    axes = axes_for_mesh(mesh)
+    if reduced:
+        cfg = mod.reduced_config()
+        N, E, F, G = 64, 128, cfg.d_feat_in, 4
+        chunks = 1
+    else:
+        cfg = mod.config(d_feat_in=info["d_feat"])
+        N, E, F, G = info["n_nodes"], info["n_edges"], info["d_feat"], info["n_graphs"]
+        chunks = info["edge_chunks"]
+
+    params_abs = nequip_mod.abstract_params(cfg)
+    pspecs = jax.tree.map(lambda _: P(), params_abs)
+    opt_cfg = AdamWConfig()
+    opt_abs = abstract_opt_state(params_abs, opt_cfg)
+    ospecs = jax.tree.map(lambda _: P(), opt_abs)
+
+    partitioned = info.get("partitioned", False) and not reduced
+    if partitioned:
+        # distributed-GNN layout: nodes/edges pre-partitioned by the data
+        # pipeline, fixed-size halo exports (1/8 of the node block)
+        ndev = mesh.size
+        n_loc = N // ndev
+        xmax = max(1, n_loc // 8)
+        aspec = axes.all_axes if len(axes.all_axes) > 1 else axes.all_axes[0]
+        batch_abs = {
+            "node_feat": _sds((N, F), jnp.float32),
+            "edge_src": _sds((E,), jnp.int32),
+            "edge_dst": _sds((E,), jnp.int32),
+            "edge_vec": _sds((E, 3), jnp.float32),
+            "export_idx": _sds((ndev * xmax,), jnp.int32),
+            "graph_id": _sds((N,), jnp.int32),
+            "energy": _sds((G,), jnp.float32),
+        }
+        bspecs = {
+            "node_feat": P(aspec, None),
+            "edge_src": P(aspec),
+            "edge_dst": P(aspec),
+            "edge_vec": P(aspec, None),
+            "export_idx": P(aspec),
+            "graph_id": P(aspec),
+            "energy": P(),
+        }
+        loss_fn_part = nequip_mod.partitioned_train_step_fn(
+            cfg, mesh, axes.all_axes, G, n_edge_chunks=chunks
+        )
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn_part)(params, batch)
+            new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_params, new_opt, loss
+
+        return CellSpec(
+            arch=arch_id, shape=shape_id, kind="train", step_fn=step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            meta=_gnn_meta(cfg, info),
+        )
+
+    batch_abs = {
+        "node_feat": _sds((N, F), jnp.float32),
+        "edge_index": _sds((2, E), jnp.int32),
+        "edge_vec": _sds((E, 3), jnp.float32),
+        "graph_id": _sds((N,), jnp.int32),
+        "energy": _sds((G,), jnp.float32),
+    }
+    if info.get("shard", True) and not reduced:
+        node_ax = _maybe_axes(N, mesh, axes.all_axes)
+        edge_ax = _maybe_axes(E, mesh, axes.all_axes)
+        bspecs = {
+            "node_feat": P(node_ax, None),
+            "edge_index": P(None, edge_ax),
+            "edge_vec": P(edge_ax, None),
+            "graph_id": P(node_ax),
+            "energy": P(),
+        }
+    else:
+        bspecs = jax.tree.map(lambda _: P(), batch_abs)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return nequip_mod.forward_train(cfg, p, batch, G, n_edge_chunks=chunks)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, loss
+
+    return CellSpec(
+        arch=arch_id, shape=shape_id, kind="train", step_fn=step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, P()),
+        meta=_gnn_meta(cfg, info if not reduced else dict(
+            n_nodes=N, n_edges=E, edge_chunks=chunks)),
+    )
+
+
+# ===========================================================================
+# RecSys cells
+# ===========================================================================
+
+
+def _recsys_flops_fwd(arch_id, cfg, B):
+    if arch_id.startswith("fm"):
+        return 4.0 * B * cfg.n_sparse * cfg.embed_dim
+    if arch_id.startswith("sasrec"):
+        S, D = cfg.seq_len, cfg.embed_dim
+        per_blk = 8 * S * D * D + 4 * S * S * D
+        return B * (cfg.n_blocks * per_blk)
+    if arch_id.startswith("autoint"):
+        F = cfg.n_sparse
+        d = cfg.d_attn
+        per_l = 6 * F * cfg.embed_dim * d + 4 * F * F * d
+        return B * cfg.n_attn_layers * per_l
+    # dlrm
+    dims = (cfg.n_dense, *cfg.bot_mlp)
+    bot = sum(2 * a * b for a, b in zip(dims[:-1], dims[1:]))
+    nf = cfg.n_sparse + 1
+    inter = 2 * nf * nf * cfg.embed_dim
+    d_in = nf * (nf - 1) // 2 + cfg.bot_mlp[-1]
+    tdims = (d_in, *cfg.top_mlp)
+    top = sum(2 * a * b for a, b in zip(tdims[:-1], tdims[1:]))
+    return float(B) * (bot + inter + top)
+
+
+def _recsys_bytes(arch_id, cfg, B, train: bool):
+    lookup = {
+        "fm": cfg.n_sparse * (cfg.embed_dim + 1) * 4 if hasattr(cfg, "n_sparse") else 0,
+        "sasrec": 3 * getattr(cfg, "seq_len", 0) * getattr(cfg, "embed_dim", 0) * 4,
+        "autoint": getattr(cfg, "n_sparse", 0) * getattr(cfg, "embed_dim", 0) * 4,
+        "dlrm-mlperf": getattr(cfg, "n_sparse", 0) * getattr(cfg, "embed_dim", 0) * 4,
+    }
+    key = arch_id.split("-reduced")[0]
+    key = key if key in lookup else arch_id
+    per_row = lookup.get(key, 64)
+    factor = 4 if train else 1   # grads + moments touch the same rows
+    return float(B) * per_row * factor
+
+
+def _recsys_cell(arch_id, mod, shape_id, mesh, reduced):
+    info = RECSYS_SHAPES[shape_id]
+    axes = axes_for_mesh(mesh)
+    cfg = mod.reduced_config() if reduced else mod.config()
+    kind = info["kind"]
+    B = info["batch"] if not reduced else 8
+    fam = arch_id
+
+    init_fn, loss_fn, serve_fn, retr_fn = {
+        "fm": (recsys_mod.fm_init, recsys_mod.fm_train_loss, None, recsys_mod.fm_retrieval),
+        "sasrec": (recsys_mod.sasrec_init, recsys_mod.sasrec_train_loss,
+                   recsys_mod.sasrec_serve, recsys_mod.sasrec_retrieval),
+        "autoint": (recsys_mod.autoint_init, recsys_mod.autoint_train_loss,
+                    None, recsys_mod.autoint_retrieval),
+        "dlrm-mlperf": (recsys_mod.dlrm_init, recsys_mod.dlrm_train_loss,
+                        None, recsys_mod.dlrm_retrieval),
+    }[fam]
+
+    params_abs = jax.eval_shape(lambda: init_fn(cfg, jax.random.PRNGKey(0)))
+    if kind != "train" and not reduced:
+        # serving copy of the big tables in bf16: halves row-exchange bytes
+        params_abs = jax.tree.map(
+            lambda ab: jax.ShapeDtypeStruct(ab.shape, jnp.bfloat16)
+            if (ab.ndim == 2 and ab.shape[0] >= (1 << 16))
+            else ab,
+            params_abs,
+        )
+    pspecs = recsys_param_specs(params_abs, axes, mesh)
+
+    def batch_for(B):
+        if fam == "sasrec":
+            return {
+                "item_seq": _sds((B, cfg.seq_len), jnp.int32),
+                "pos_items": _sds((B, cfg.seq_len), jnp.int32),
+                "neg_items": _sds((B, cfg.seq_len), jnp.int32),
+                "label": _sds((B,), jnp.float32),
+            }
+        batch = {
+            "sparse": _sds((B, cfg.n_sparse), jnp.int32),
+            "label": _sds((B,), jnp.float32),
+        }
+        if fam == "dlrm-mlperf":
+            batch["dense"] = _sds((B, cfg.n_dense), jnp.float32)
+        return batch
+
+    meta = dict(
+        model_flops=_recsys_flops_fwd(fam, cfg, B) * (3 if kind == "train" else 1),
+        analytic_flops=_recsys_flops_fwd(fam, cfg, B) * (3 if kind == "train" else 1),
+        analytic_bytes=_recsys_bytes(fam, cfg, B, kind == "train"),
+        scan_trips=1,
+        params_total=sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_abs)),
+        params_active=0,
+        tokens=B,
+    )
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_abs = abstract_opt_state(params_abs, opt_cfg)
+        ospecs = opt_state_specs(pspecs, params_abs, axes, dp_size(mesh, axes))
+        batch_abs = batch_for(B)
+        bspecs = {
+            k: P(axes.dp) if v.ndim == 1 else P(axes.dp, None)
+            for k, v in batch_abs.items()
+        }
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+            new_params, new_opt = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_params, new_opt, loss
+
+        return CellSpec(
+            arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, P()),
+            meta=meta,
+        )
+
+    if kind == "serve":
+        batch_abs = batch_for(B)
+        if fam == "sasrec":
+            batch_abs = {
+                "item_seq": batch_abs["item_seq"],
+                "target": _sds((B,), jnp.int32),
+            }
+
+            def step(params, batch):
+                return recsys_mod.sasrec_serve(cfg, params, batch)
+
+        else:
+            batch_abs.pop("label")
+            if fam == "fm":
+                def step(params, batch):
+                    return recsys_mod.fm_logits(cfg, params, batch["sparse"])
+            elif fam == "autoint":
+                def step(params, batch):
+                    return recsys_mod.autoint_logits(cfg, params, batch["sparse"])
+            else:
+                def step(params, batch):
+                    return recsys_mod.dlrm_logits(cfg, params, batch["dense"], batch["sparse"])
+
+        bspecs = {
+            k: P(axes.dp) if v.ndim == 1 else P(axes.dp, None)
+            for k, v in batch_abs.items()
+        }
+        return CellSpec(
+            arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+            abstract_args=(params_abs, batch_abs),
+            in_specs=(pspecs, bspecs),
+            out_specs=P(axes.dp),
+            meta=meta,
+        )
+
+    # retrieval: one query vs n_candidates
+    ncand = info.get("n_candidates", 1000) if not reduced else 64
+    cand_abs = _sds((ncand,), jnp.int32)
+    cand_spec = P(_maybe_axes(ncand, mesh, axes.all_axes))
+    meta = dict(meta)
+    meta["model_flops"] = _recsys_flops_fwd(fam, cfg, ncand)
+    meta["analytic_flops"] = meta["model_flops"]
+    meta["analytic_bytes"] = _recsys_bytes(fam, cfg, ncand, False)
+    meta["tokens"] = ncand
+
+    if fam == "sasrec":
+        seq_abs = _sds((1, cfg.seq_len), jnp.int32)
+
+        def step(params, item_seq, cand):
+            return recsys_mod.sasrec_retrieval(cfg, params, item_seq, cand)
+
+        args = (params_abs, seq_abs, cand_abs)
+        ispecs = (pspecs, P(), cand_spec)
+    elif fam == "fm":
+        user_abs = _sds((cfg.n_sparse,), jnp.int32)
+
+        def step(params, user, cand):
+            return recsys_mod.fm_retrieval(cfg, params, user, cand)
+
+        args = (params_abs, user_abs, cand_abs)
+        ispecs = (pspecs, P(), cand_spec)
+    elif fam == "autoint":
+        user_abs = _sds((cfg.n_sparse,), jnp.int32)
+
+        def step(params, user, cand):
+            return recsys_mod.autoint_retrieval(cfg, params, user, cand)
+
+        args = (params_abs, user_abs, cand_abs)
+        ispecs = (pspecs, P(), cand_spec)
+    else:
+        user_abs = _sds((cfg.n_sparse,), jnp.int32)
+        dense_abs = _sds((cfg.n_dense,), jnp.float32)
+        cand_sharding = jax.sharding.NamedSharding(
+            mesh, P(_maybe_axes(ncand, mesh, axes.dp), None)
+        )
+
+        def step(params, dense, user, cand):
+            return recsys_mod.dlrm_retrieval(
+                cfg, params, dense, user, cand,
+                constrain=lambda x: jax.lax.with_sharding_constraint(
+                    x, cand_sharding
+                ),
+            )
+
+        args = (params_abs, dense_abs, user_abs, cand_abs)
+        ispecs = (pspecs, P(), P(), cand_spec)
+
+    return CellSpec(
+        arch=arch_id, shape=shape_id, kind=kind, step_fn=step,
+        abstract_args=args,
+        in_specs=ispecs,
+        out_specs=cand_spec,
+        meta=meta,
+    )
+
+
+# ===========================================================================
+# Entry points
+# ===========================================================================
+
+
+def build_cell(arch_id: str, shape_id: str, mesh, reduced: bool = False) -> CellSpec:
+    mod = get_arch_module(arch_id)
+    if mod.FAMILY == "lm":
+        return _lm_cell(arch_id, mod, shape_id, mesh, reduced)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(arch_id, mod, shape_id, mesh, reduced)
+    return _recsys_cell(arch_id, mod, shape_id, mesh, reduced)
+
+
+def all_cells():
+    for arch in ALL_ARCHS:
+        for shape in ARCH_SHAPES[arch]:
+            yield arch, shape

@@ -1,0 +1,35 @@
+"""The paper's contribution: document retrieval on repetitive string
+collections (Gagie et al.).
+
+Modules:
+  suffix   — suffix array / LCP / document array / ILCP construction
+  csa      — FM-index (RLCSA-accounted) backward search + locate
+  ilcp     — Interleaved LCP: run-length listing + counting   (Section 3)
+  pdl      — Precomputed Document Lists: listing + top-k      (Section 4)
+  sada     — compressed Sadakane document counting            (Section 5)
+  listing  — brute-force and Sada-C baselines                 (Section 6.2.1)
+  tfidf    — ranked multi-term AND/OR queries                 (Section 6.5)
+"""
+
+from repro.core.suffix import (
+    Collection,
+    SuffixData,
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.csa import CSA, build_csa, csa_search, csa_search_batch
+
+__all__ = [
+    "Collection",
+    "SuffixData",
+    "build_suffix_data",
+    "concat_documents",
+    "encode_pattern",
+    "sa_range_for_pattern",
+    "CSA",
+    "build_csa",
+    "csa_search",
+    "csa_search_batch",
+]

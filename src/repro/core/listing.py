@@ -1,0 +1,186 @@
+"""Baseline document listing / top-k algorithms (Section 6.2.1 / 6.3.1).
+
+* Brute-D — sort the stored DA[lo, hi) slice, report distinct ids (+ freqs).
+* Brute-L — same, but document ids come from CSA locate + B-rank.
+* Sada-C  — Sadakane's RMQ recursion over Muthukrishnan's C array with the
+            V-marking optimization (the paper's Sada-C-L / Sada-C-D).
+
+These are the paper's own baselines and also the engines behind the top-k
+brute variants and the PDL fallback for short ranges.
+
+TPU adaptation: Brute-X sorts a fixed-width window (max_occ) — a dense
+``jnp.sort`` is exactly what the VPU is good at, making Brute the *strong*
+baseline on accelerators, as the paper observes it is on CPUs for small
+occ/df.  All functions are vmap-ready over (lo, hi).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32
+from repro.core.csa import CSA, csa_da_at, csa_lookup_batch
+from repro.succinct.rmq import SparseTableRMQ, rmq_query
+
+
+# ---------------------------------------------------------------------------
+# Brute force
+# ---------------------------------------------------------------------------
+
+
+def _distinct_from_window(window, valid, max_df: int):
+    """Given a gathered doc-id window (int32[max_occ]) and validity mask,
+    return (docs[max_df] padded -1, count, freqs[max_df])."""
+    big = jnp.iinfo(jnp.int32).max
+    keys = jnp.where(valid, window, big)
+    s = jnp.sort(keys)
+    first = jnp.concatenate([jnp.ones(1, jnp.bool_), s[1:] != s[:-1]])
+    is_doc = s < big
+    new_doc = first & is_doc
+    # distinct ids in sorted order, compacted to the front; non-writes are
+    # routed to an out-of-bounds index and dropped.
+    idx_among_new = jnp.cumsum(new_doc) - 1
+    scatter_idx = jnp.where(new_doc, idx_among_new, max_df).astype(IDX)
+    docs = jnp.full(max_df, -1, IDX)
+    docs = docs.at[scatter_idx].set(s.astype(IDX), mode="drop")
+    count = jnp.minimum(jnp.sum(new_doc), max_df).astype(IDX)
+    # frequencies: segment boundaries in the sorted window
+    pos = jnp.arange(s.shape[0], dtype=IDX)
+    starts = jnp.full(max_df + 1, jnp.sum(is_doc), IDX)
+    starts_idx = jnp.where(new_doc, idx_among_new, max_df + 1).astype(IDX)
+    starts = starts.at[starts_idx].set(pos, mode="drop")
+    freqs = jnp.where(
+        jnp.arange(max_df) < count, starts[1:] - starts[:-1], 0
+    ).astype(IDX)
+    docs = jnp.where(jnp.arange(max_df, dtype=IDX) < count, docs, -1)
+    return docs, count, freqs
+
+
+def brute_list_da(da: jnp.ndarray, lo, hi, max_occ: int, max_df: int | None = None):
+    """Brute-D: distinct docs (+freqs) in DA[lo, hi), window cap max_occ.
+
+    Returns (docs[max_df], count, freqs[max_df]).  Ranges longer than
+    max_occ are truncated (callers size max_occ from query statistics, as
+    the paper sizes its experiments by occ).
+    """
+    max_df = max_df or max_occ
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    idx = lo + jnp.arange(max_occ, dtype=IDX)
+    valid = idx < hi
+    window = da[jnp.minimum(idx, da.shape[0] - 1)]
+    return _distinct_from_window(window, valid, max_df)
+
+
+def brute_list_csa(csa: CSA, lo, hi, max_occ: int, max_df: int | None = None):
+    """Brute-L: ids via locate (the paper's least-space baseline)."""
+    max_df = max_df or max_occ
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    idx = lo + jnp.arange(max_occ, dtype=IDX)
+    valid = idx < hi
+    text_pos = csa_lookup_batch(csa, jnp.minimum(idx, csa.n - 1))
+    window = jax.vmap(lambda p: csa.doc_bv.rank1(p + 1) - 1)(text_pos)
+    return _distinct_from_window(window, valid, max_df)
+
+
+def brute_topk(docs, count, freqs, k: int):
+    """Top-k by tf desc, ties by doc id asc (paper Section 4.2 ordering).
+
+    Input from brute_list_*; returns (top_docs[k], top_freqs[k]).
+    """
+    max_df = docs.shape[0]
+    valid = jnp.arange(max_df, dtype=IDX) < count
+    # sort by (-freq, doc); invalid entries sort last
+    big = jnp.iinfo(jnp.int32).max
+    negfreq = jnp.where(valid, -freqs, big)
+    doc_key = jnp.where(valid, docs, big)
+    order = jnp.lexsort((doc_key, negfreq))
+    kk = min(k, max_df)
+    top = order[:kk]
+    out_docs = jnp.full(k, -1, IDX).at[:kk].set(docs[top])
+    out_freqs = jnp.zeros(k, IDX).at[:kk].set(freqs[top])
+    ok = jnp.arange(k, dtype=IDX) < jnp.minimum(count, k)
+    return (
+        jnp.where(ok, out_docs, -1).astype(IDX),
+        jnp.where(ok, out_freqs, 0).astype(IDX),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sadakane's algorithm over the C array (Sada-C)
+# ---------------------------------------------------------------------------
+
+
+def sada_c_list_docs(
+    rmq_c: SparseTableRMQ, get_da, lo, hi, d: int, max_df: int
+):
+    """Sadakane (2007): RMQ recursion over C with V-marking.
+
+    Identical control structure to the ILCP lister but per *position*:
+    pop range, take leftmost min k, if DA[k] unseen report + split,
+    else prune the whole range (C[k] >= lo check is replaced by V, which is
+    the paper's own space optimization).
+    """
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    cap = max_df + 4
+    iter_cap = 2 * max_df + 8
+
+    stack_a = jnp.zeros(cap, IDX).at[0].set(lo)
+    stack_b = jnp.zeros(cap, IDX).at[0].set(hi - 1)
+    init = (
+        stack_a,
+        stack_b,
+        as_i32(1),
+        jnp.zeros(d, jnp.bool_),
+        jnp.full(max_df, -1, IDX),
+        as_i32(0),
+        as_i32(0),
+    )
+
+    def cond(state):
+        _, _, sp, _, _, cnt, it = state
+        return (sp > 0) & (cnt < max_df) & (it < iter_cap)
+
+    def body(state):
+        sa_, sb_, sp, V, res, cnt, it = state
+        a = sa_[sp - 1]
+        b = sb_[sp - 1]
+        sp = sp - 1
+        valid = (a <= b) & (lo < hi)
+
+        k = rmq_query(rmq_c, jnp.minimum(a, hi - 1), jnp.minimum(b, hi - 1))
+        g = get_da(k)
+        seen = V[g] | ~valid
+
+        V = jnp.where(valid & ~seen, V.at[g].set(True), V)
+        res = jnp.where(
+            valid & ~seen, res.at[jnp.minimum(cnt, max_df - 1)].set(g), res
+        )
+        cnt = jnp.where(valid & ~seen, cnt + 1, cnt)
+
+        def push(sa_, sb_, sp, x, y, do):
+            do = do & (x <= y) & (sp < cap)
+            sa_ = jnp.where(do, sa_.at[jnp.minimum(sp, cap - 1)].set(x), sa_)
+            sb_ = jnp.where(do, sb_.at[jnp.minimum(sp, cap - 1)].set(y), sb_)
+            return sa_, sb_, jnp.where(do, sp + 1, sp)
+
+        grow = valid & ~seen
+        sa_, sb_, sp = push(sa_, sb_, sp, k + 1, b, grow)
+        sa_, sb_, sp = push(sa_, sb_, sp, a, k - 1, grow)
+        return (sa_, sb_, sp, V, res, cnt, it + 1)
+
+    _, _, _, _, res, cnt, _ = jax.lax.while_loop(cond, body, init)
+    return res, cnt
+
+
+def sada_c_list_docs_da(rmq_c, da: jnp.ndarray, lo, hi, d: int, max_df: int):
+    return sada_c_list_docs(rmq_c, lambda k: da[k], lo, hi, d, max_df)
+
+
+def sada_c_list_docs_csa(rmq_c, csa: CSA, lo, hi, max_df: int):
+    return sada_c_list_docs(
+        rmq_c, lambda k: csa_da_at(csa, k), lo, hi, csa.d, max_df
+    )

@@ -1,0 +1,579 @@
+"""PDL — Precomputed Document Lists (Section 4).
+
+Build (host-side, offline):
+  1. Enumerate suffix-tree topology (lcp-interval tree).
+  2. Select *leaf blocks*: nodes v with |SA_v| <= b < |SA_parent(v)| — these
+     tile the suffix array left to right (suffix-tree leaves whose smallest
+     enclosing interval exceeds b become single-position blocks).
+  3. Bottom-up beta-pruning of internal nodes: keep v iff the total size of
+     its current children's sets exceeds beta * |D_v| (storing v then caps
+     the union work for queries at beta * df, Section 4.1 condition 3);
+     with beta=None every internal node above the leaf blocks is kept
+     (the paper's PDL-b "inverted index" variant for top-k).
+  4. Document lists: listing mode stores D_v sorted by id; top-k mode sorts
+     by (tf desc, id asc) and stores run-length-encoded frequencies
+     (Section 4.2).
+  5. All lists are Re-Pair-compressed with a shared grammar
+     (repro.grammar.repair); stored sets hold terminals (< d) and
+     nonterminals, exactly the paper's A / G arrays.
+
+Query (jit/vmap, TPU execution model):
+  * partial head/tail blocks -> brute CSA windows (the paper's list());
+  * full blocks -> the Fig-4 climb: from each leaf, follow first-child
+    parent pointers to the highest stored node whose subtree fits in the
+    query, decompress its set (bounded-stack grammar expansion), jump to
+    the leaf after that subtree;
+  * listing: dedupe via sort-unique; top-k: merge by document, sum term
+    frequencies, rank by (tf desc, id asc) — the "brute-force merging" the
+    paper found fastest (Section 4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32, ceil_log2, delta_code_len, elias_fano_bits, pytree_dataclass
+from repro.core.csa import CSA, csa_lookup_batch
+from repro.core.listing import _distinct_from_window
+from repro.core.sufftree import lcp_interval_tree
+from repro.core.suffix import SuffixData
+from repro.grammar.repair import Grammar, modeled_bits_grammar, repair_compress_lists
+
+
+@pytree_dataclass(
+    meta=(
+        "n", "d", "L", "I", "block_size", "beta", "nrules",
+        "max_set_len", "max_rule_depth", "has_freqs", "total_docs_stored",
+    )
+)
+class PDLIndex:
+    # --- leaf tiling ---------------------------------------------------
+    leaf_starts: jnp.ndarray     # int32[L + 1] SA offsets; leaf_starts[L] = n
+    # --- sparse tree (nodes: 0..L-1 leaves, L..L+I-1 internal) ----------
+    is_first_child: jnp.ndarray  # bool[L + I]
+    parent_of: jnp.ndarray       # int32[L + I]: internal idx for first children, else -1
+    next_leaf: jnp.ndarray       # int32[max(I,1)]: leaf idx after internal subtree
+    # --- stored (reduced) document lists --------------------------------
+    set_off: jnp.ndarray         # int32[L + I + 1] into A
+    A: jnp.ndarray               # int32: terminal (< d) or nonterminal (> d)
+    rule_left: jnp.ndarray       # int32[max(R,1)]
+    rule_right: jnp.ndarray      # int32[max(R,1)]
+    # --- per-node expanded sizes ----------------------------------------
+    doc_base: jnp.ndarray        # int32[L + I + 1] prefix sum of |D_v|
+    # --- frequencies (top-k mode; empty in listing mode) ----------------
+    freq_vals: jnp.ndarray       # int32[K]
+    freq_gcum: jnp.ndarray       # int32[K] strictly-increasing global cum counts
+    # --- static metadata --------------------------------------------------
+    n: int
+    d: int
+    L: int
+    I: int
+    block_size: int
+    beta: float | None
+    nrules: int
+    max_set_len: int
+    max_rule_depth: int
+    has_freqs: bool
+    total_docs_stored: int
+
+    def modeled_bits(self) -> int:
+        """Paper Section 4.1 accounting: A, G, B_A, B_G, B_L, B_F, F, N
+        (+ freq runs, delta-coded, for the top-k variant)."""
+        L, I, n, d = self.L, self.I, self.n, self.d
+        nR = self.nrules
+        a_bits = int(self.A.shape[0]) * ceil_log2(d + nR + 1)
+        g_bits = 2 * nR * ceil_log2(d + nR + 1)
+        ba_bits = int(self.A.shape[0]) + 2 * (L + I)
+        bl_bits = elias_fano_bits(L, max(n, 1))
+        bf_bits = (L + I) + I * ceil_log2(max(2, I)) + I * ceil_log2(max(2, L))
+        freq_bits = 0
+        if self.has_freqs:
+            fv = np.asarray(self.freq_vals)
+            gc = np.asarray(self.freq_gcum)
+            lens = np.diff(np.concatenate([[0], gc]))
+            for v, ln in zip(fv.tolist(), lens.tolist()):
+                freq_bits += delta_code_len(int(v) + 1) + delta_code_len(max(int(ln), 1))
+        return a_bits + g_bits + ba_bits + bl_bits + bf_bits + freq_bits
+
+
+# ===========================================================================
+# Construction
+# ===========================================================================
+
+
+@dataclasses.dataclass
+class _BuildState:
+    leaf_bounds: list
+    internal_children: list  # per internal node: child node ids
+    internal_next_leaf: list
+
+
+def _node_set(da: np.ndarray, lo: int, hi: int, topk: bool):
+    seg = da[lo:hi]
+    docs, counts = np.unique(seg, return_counts=True)
+    if topk:
+        order = np.lexsort((docs, -counts))
+        return docs[order].astype(np.int64), counts[order].astype(np.int64)
+    return docs.astype(np.int64), counts.astype(np.int64)
+
+
+def build_pdl(
+    data: SuffixData,
+    block_size: int = 256,
+    beta: float | None = 16.0,
+    mode: str = "list",
+    repair_kwargs: dict | None = None,
+) -> PDLIndex:
+    assert mode in ("list", "topk")
+    topk = mode == "topk"
+    da = np.asarray(data.da)
+    n, d = data.n, data.d
+    b = block_size
+
+    tree = lcp_interval_tree(data.lcp)
+    kids_of = tree.children_lists()
+    sizes = tree.hi - tree.lo
+
+    # root = the interval covering [0, n) (parent -1, max size); tiny
+    # collections may lack internal nodes entirely.
+    roots = [k for k in range(tree.size) if tree.parent[k] < 0]
+
+    st = _BuildState([], [], [])
+
+    leaf_ids: list[int] = []          # node ids of leaves, left-to-right
+    node_is_leaf: list[bool] = []
+    first_child_of: dict[int, int] = {}   # node id -> internal idx
+    internal_ids: list[int] = []
+
+    set_store: list[np.ndarray] = []
+    freq_store: list[np.ndarray] = []
+
+    def new_leaf(lo: int, hi: int) -> int:
+        nid = len(set_store)
+        docs, freqs = _node_set(da, lo, hi, topk)
+        set_store.append(docs)
+        freq_store.append(freqs)
+        node_is_leaf.append(True)
+        st.leaf_bounds.append((lo, hi))
+        return nid
+
+    # iterative post-order over big (> b) internal nodes
+    # frame: [tree_node, unit list under construction, cursor pos, child idx]
+    def process(root_k: int) -> list[int]:
+        FRAME = object()
+        stack = [[root_k, [], int(tree.lo[root_k]), 0, None]]
+        result: dict[int, list[int]] = {}
+        while stack:
+            frame = stack[-1]
+            k, units, cursor, ci, pending = frame
+            children = [c for c in kids_of[k] if sizes[c] >= 2]
+            # absorb a finished child cover
+            if pending is not None:
+                units.extend(result.pop(pending))
+                frame[4] = None
+            advanced = False
+            while ci < len(children):
+                c = children[ci]
+                clo, chi = int(tree.lo[c]), int(tree.hi[c])
+                # leading gap positions: single-suffix leaves
+                while cursor < clo:
+                    units.append(new_leaf(cursor, cursor + 1))
+                    cursor += 1
+                if chi - clo <= b:
+                    units.append(new_leaf(clo, chi))
+                    cursor = chi
+                    ci += 1
+                else:
+                    # recurse
+                    frame[1], frame[2], frame[3] = units, chi, ci + 1
+                    frame[4] = c
+                    stack.append([c, [], clo, 0, None])
+                    advanced = True
+                    break
+                frame[1], frame[2], frame[3] = units, cursor, ci
+            if advanced:
+                continue
+            # trailing gap positions
+            hi_k = int(tree.hi[k])
+            while cursor < hi_k:
+                units.append(new_leaf(cursor, cursor + 1))
+                cursor += 1
+            # finalize node k
+            stack.pop()
+            docs, freqs = _node_set(da, int(tree.lo[k]), hi_k, topk)
+            child_total = sum(len(set_store[u]) for u in units)
+            keep = beta is None or child_total > beta * len(docs)
+            if keep:
+                nid = len(set_store)
+                set_store.append(docs)
+                freq_store.append(freqs)
+                node_is_leaf.append(False)
+                internal_ids.append(nid)
+                st.internal_children.append(list(units))
+                st.internal_next_leaf.append(len(st.leaf_bounds))
+                cover = [nid]
+            else:
+                cover = list(units)
+            if stack:
+                result[k] = cover
+            else:
+                return cover
+        return []
+
+    top_cover: list[int] = []
+    if tree.size == 0 or n <= b:
+        # whole collection is one leaf block
+        new_leaf(0, n)
+        top_cover = [0]
+    else:
+        # find the root interval [0, n)
+        root_k = max(roots, key=lambda k: int(sizes[k]))
+        assert int(tree.lo[root_k]) == 0 and int(tree.hi[root_k]) == n
+        top_cover = process(root_k)
+
+    # ---- renumber: leaves first (creation order == left-to-right), then
+    # internal nodes (creation order == post-order)
+    old_ids = list(range(len(set_store)))
+    leaf_old = [i for i in old_ids if node_is_leaf[i]]
+    internal_old = [i for i in old_ids if not node_is_leaf[i]]
+    remap = {}
+    for new, old in enumerate(leaf_old):
+        remap[old] = new
+    L = len(leaf_old)
+    for j, old in enumerate(internal_old):
+        remap[old] = L + j
+    I = len(internal_old)
+
+    lists = [None] * (L + I)
+    freqs_l = [None] * (L + I)
+    for old, new in remap.items():
+        lists[new] = set_store[old]
+        freqs_l[new] = freq_store[old]
+
+    leaf_bounds_sorted = sorted(st.leaf_bounds)
+    leaf_starts = np.asarray(
+        [lo for lo, _ in leaf_bounds_sorted] + [n], dtype=np.int32
+    )
+    # leaves must tile [0, n)
+    ends = [hi for _, hi in leaf_bounds_sorted]
+    assert leaf_starts[0] == 0 and ends[-1] == n
+    assert all(ends[i] == leaf_starts[i + 1] for i in range(L))
+
+    is_first_child = np.zeros(L + I, dtype=bool)
+    parent_of = np.full(L + I, -1, dtype=np.int32)
+    next_leaf = np.zeros(max(I, 1), dtype=np.int32)
+    for j, old in enumerate(internal_old):
+        # creation order of internal nodes matches st.internal_children order
+        children = st.internal_children[j]
+        nl = st.internal_next_leaf[j]
+        next_leaf[j] = nl
+        first = remap[children[0]]
+        is_first_child[first] = True
+        parent_of[first] = j
+
+    # ---- grammar compression of all lists (shared grammar)
+    repair_kwargs = repair_kwargs or {}
+    g, segments = repair_compress_lists(lists, alphabet=d, **repair_kwargs)
+    assert len(segments) == L + I
+    set_off = np.zeros(L + I + 1, dtype=np.int32)
+    for i, seg in enumerate(segments):
+        set_off[i + 1] = set_off[i] + len(seg)
+    A = (
+        np.concatenate(segments).astype(np.int32)
+        if L + I
+        else np.zeros(0, np.int32)
+    )
+    R = g.nrules
+    rule_left = g.rules[:, 0].astype(np.int32) if R else np.zeros(1, np.int32)
+    rule_right = g.rules[:, 1].astype(np.int32) if R else np.zeros(1, np.int32)
+
+    # rule depth (for the query-time expansion stack bound)
+    depth = np.zeros(max(R, 1), dtype=np.int64)
+    for r in range(R):
+        l, rr = g.rules[r]
+        dl = 1 if l <= d else 1 + depth[l - d - 1]
+        dr = 1 if rr <= d else 1 + depth[rr - d - 1]
+        depth[r] = max(dl, dr)
+    max_rule_depth = int(depth.max()) if R else 1
+
+    # ---- per-node sizes and frequency runs
+    set_sizes = np.asarray([len(x) for x in lists], dtype=np.int64)
+    doc_base = np.concatenate([[0], np.cumsum(set_sizes)]).astype(np.int32)
+    max_set_len = int(set_sizes.max()) if len(set_sizes) else 0
+
+    freq_vals_l: list[int] = []
+    gcum_l: list[int] = []
+    running = 0
+    if topk:
+        for fl in freqs_l:
+            fl = np.asarray(fl)
+            if len(fl) == 0:
+                continue
+            change = np.flatnonzero(np.diff(fl)) + 1
+            starts = np.concatenate([[0], change])
+            ends_ = np.concatenate([change, [len(fl)]])
+            for s, e in zip(starts, ends_):
+                freq_vals_l.append(int(fl[s]))
+                running += int(e - s)
+                gcum_l.append(running)
+    freq_vals = np.asarray(freq_vals_l if freq_vals_l else [0], dtype=np.int32)
+    freq_gcum = np.asarray(gcum_l if gcum_l else [1], dtype=np.int32)
+
+    return PDLIndex(
+        leaf_starts=jnp.asarray(leaf_starts),
+        is_first_child=jnp.asarray(is_first_child),
+        parent_of=jnp.asarray(parent_of),
+        next_leaf=jnp.asarray(next_leaf),
+        set_off=jnp.asarray(set_off),
+        A=jnp.asarray(A),
+        rule_left=jnp.asarray(rule_left),
+        rule_right=jnp.asarray(rule_right),
+        doc_base=jnp.asarray(doc_base),
+        freq_vals=jnp.asarray(freq_vals),
+        freq_gcum=jnp.asarray(freq_gcum),
+        n=n,
+        d=d,
+        L=L,
+        I=I,
+        block_size=block_size,
+        beta=beta,
+        nrules=R,
+        max_set_len=max_set_len,
+        max_rule_depth=max_rule_depth,
+        has_freqs=topk,
+        total_docs_stored=int(set_sizes.sum()),
+    )
+
+
+# ===========================================================================
+# Query-time pieces (jit / vmap)
+# ===========================================================================
+
+
+def _expand_node_into(index: PDLIndex, nd, buf_docs, buf_freqs, base, cap):
+    """Decompress node nd's list into buf starting at ``base``.
+
+    Returns (buf_docs, buf_freqs, new_base).  Emits at most cap - base
+    entries.  Frequencies come from the global run arrays (top-k mode);
+    in listing mode buf_freqs is written with 1s.
+    """
+    d = index.d
+    start = index.set_off[nd]
+    end = index.set_off[nd + 1]
+    stack_size = 2 * index.max_rule_depth + 4
+    lenA = index.A.shape[0]
+    iter_cap = 4 * index.max_set_len + 16
+
+    def cond(c):
+        ptr, sp, stack, bd, bf, cnt, it = c
+        return ((ptr < end) | (sp > 0)) & (base + cnt < cap) & (it < iter_cap)
+
+    def body(c):
+        ptr, sp, stack, bd, bf, cnt, it = c
+        from_stack = sp > 0
+        sym = jnp.where(
+            from_stack,
+            stack[jnp.maximum(sp - 1, 0)],
+            index.A[jnp.minimum(ptr, lenA - 1)],
+        )
+        sp = jnp.where(from_stack, sp - 1, sp)
+        ptr = jnp.where(from_stack, ptr, ptr + 1)
+        is_term = sym < d
+        # emit terminal
+        widx = jnp.where(is_term, base + cnt, cap)  # OOB -> dropped
+        bd = bd.at[widx].set(sym, mode="drop")
+        gpos = index.doc_base[nd] + cnt
+        fidx = jnp.searchsorted(index.freq_gcum, gpos, side="right")
+        fval = index.freq_vals[jnp.minimum(fidx, index.freq_vals.shape[0] - 1)]
+        bf = bf.at[widx].set(
+            jnp.where(index.has_freqs, fval, 1), mode="drop"
+        )
+        cnt = jnp.where(is_term, cnt + 1, cnt)
+        # push rule children: right then left (left expands first)
+        ridx = jnp.clip(sym - d - 1, 0, index.rule_left.shape[0] - 1)
+        rl = index.rule_left[ridx]
+        rr = index.rule_right[ridx]
+        push = ~is_term
+        s1 = jnp.minimum(sp, stack_size - 1)
+        stack = jnp.where(push, stack.at[s1].set(rr), stack)
+        sp = jnp.where(push, sp + 1, sp)
+        s2 = jnp.minimum(sp, stack_size - 1)
+        stack = jnp.where(push, stack.at[s2].set(rl), stack)
+        sp = jnp.where(push, sp + 1, sp)
+        return (ptr, sp, stack, bd, bf, cnt, it + 1)
+
+    init = (
+        start,
+        as_i32(0),
+        jnp.zeros(stack_size, IDX),
+        buf_docs,
+        buf_freqs,
+        as_i32(0),
+        as_i32(0),
+    )
+    ptr, sp, stack, bd, bf, cnt, it = jax.lax.while_loop(cond, body, init)
+    return bd, bf, base + cnt
+
+
+def _climb(index: PDLIndex, leaf_i, rn):
+    """Fig 4 parent(): highest stored ancestor whose subtree fits in
+    leaves [.., rn].  Returns (node id, next leaf index)."""
+    L = index.L
+
+    def cond(c):
+        node, nxt, go = c
+        return go
+
+    def body(c):
+        node, nxt, _ = c
+        isf = index.is_first_child[node]
+        par = index.parent_of[node]
+        nl = index.next_leaf[jnp.clip(par, 0, max(index.I - 1, 0))]
+        ok = isf & (par >= 0) & (nl - 1 <= rn)
+        node2 = jnp.where(ok, L + par, node)
+        nxt2 = jnp.where(ok, nl, nxt)
+        return (node2, nxt2, ok)
+
+    node, nxt, _ = jax.lax.while_loop(
+        cond, body, (as_i32(leaf_i), as_i32(leaf_i) + 1, jnp.bool_(True))
+    )
+    return node, nxt
+
+
+def _brute_window_into(csa: CSA, lo, hi, buf_docs, buf_freqs, base, cap, window: int):
+    """CSA-locate a partial block [lo, hi) (hi - lo <= window) into buf
+    with frequency-1 entries."""
+    idx = as_i32(lo) + jnp.arange(window, dtype=IDX)
+    valid = idx < hi
+    pos = csa_lookup_batch(csa, jnp.minimum(idx, csa.n - 1))
+    docs = jax.vmap(lambda p: csa.doc_bv.rank1(p + 1) - 1)(pos)
+    offs = jnp.cumsum(valid.astype(IDX)) - 1
+    widx = jnp.where(valid, base + offs, cap)
+    buf_docs = buf_docs.at[widx].set(docs, mode="drop")
+    buf_freqs = buf_freqs.at[widx].set(1, mode="drop")
+    return buf_docs, buf_freqs, base + jnp.sum(valid.astype(IDX))
+
+
+def _pdl_gather(index: PDLIndex, csa: CSA, lo, hi, max_buf: int, max_cover: int):
+    """Shared query core: fill a buffer with (doc, tf) pairs covering
+    SA[lo, hi) — partial blocks via CSA, full blocks via climb+expand.
+    Returns (buf_docs, buf_freqs, count)."""
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    L = index.L
+    b = index.block_size
+    leaf_starts = index.leaf_starts
+
+    buf_docs = jnp.zeros(max_buf + 1, IDX)
+    buf_freqs = jnp.zeros(max_buf + 1, IDX)
+    cap = as_i32(max_buf)
+
+    # full leaves: first leaf starting >= lo .. last leaf ending <= hi
+    ln = jnp.searchsorted(leaf_starts[:L], lo, side="left").astype(IDX)
+    n_full_ends = jnp.searchsorted(leaf_starts[1:], hi, side="right").astype(IDX)
+    rn = n_full_ends - 1  # inclusive; may be < ln (no full leaves)
+
+    # head partial: [lo, min(hi, leaf_starts[ln]))
+    head_hi = jnp.minimum(hi, leaf_starts[jnp.minimum(ln, L)])
+    base = as_i32(0)
+    buf_docs, buf_freqs, base = _brute_window_into(
+        csa, lo, head_hi, buf_docs, buf_freqs, base, cap, b
+    )
+    # tail partial: [leaf_starts[max(rn + 1, ln)], hi)
+    tail_lo_idx = jnp.minimum(jnp.maximum(rn + 1, ln), L)
+    tail_lo = jnp.maximum(leaf_starts[tail_lo_idx], head_hi)
+    buf_docs, buf_freqs, base = _brute_window_into(
+        csa, tail_lo, hi, buf_docs, buf_freqs, base, cap, b
+    )
+
+    # full blocks via climb + expansion
+    def cond(c):
+        i, bd, bf, base, it = c
+        return (i <= rn) & (it < max_cover)
+
+    def body(c):
+        i, bd, bf, base, it = c
+        node, nxt = _climb(index, i, rn)
+        bd, bf, base = _expand_node_into(index, node, bd, bf, base, cap)
+        return (nxt, bd, bf, base, it + 1)
+
+    _, buf_docs, buf_freqs, base, _ = jax.lax.while_loop(
+        cond, body, (ln, buf_docs, buf_freqs, base, as_i32(0))
+    )
+    return buf_docs[:max_buf], buf_freqs[:max_buf], base
+
+
+def pdl_list_docs(
+    index: PDLIndex, csa: CSA, lo, hi, max_df: int, max_buf: int = 4096,
+    max_cover: int = 1024,
+):
+    """Document listing: distinct ids in DA[lo, hi).  Returns (docs, count)."""
+    bd, bf, cnt = _pdl_gather(index, csa, lo, hi, max_buf, max_cover)
+    valid = jnp.arange(max_buf, dtype=IDX) < cnt
+    docs, count, _ = _distinct_from_window(bd, valid, max_df)
+    return docs, count
+
+
+def pdl_doc_freqs(
+    index: PDLIndex, csa: CSA, lo, hi, max_buf: int = 4096, max_cover: int = 1024,
+):
+    """Aggregate (document, tf) pairs for SA[lo, hi).
+
+    Returns (docs int32[max_buf] padded with INT32_MAX, tf int32[max_buf],
+    ndocs).  This is the per-term primitive behind top-k and the TF-IDF
+    index (Section 6.5): PDL lists merged brute-force by document.
+    """
+    bd, bf, cnt = _pdl_gather(index, csa, lo, hi, max_buf, max_cover)
+    valid = jnp.arange(max_buf, dtype=IDX) < cnt
+    big = jnp.iinfo(jnp.int32).max
+    keys = jnp.where(valid, bd, big)
+    order = jnp.argsort(keys)
+    s_docs = keys[order]
+    s_freqs = jnp.where(valid, bf, 0)[order]
+    # segment-sum frequencies by document
+    first = jnp.concatenate([jnp.ones(1, jnp.bool_), s_docs[1:] != s_docs[:-1]])
+    is_doc = s_docs < big
+    new_doc = first & is_doc
+    cums = jnp.concatenate([jnp.zeros(1, IDX), jnp.cumsum(s_freqs)])
+    pos = jnp.arange(max_buf, dtype=IDX)
+    seg_id = jnp.cumsum(new_doc) - 1
+    nseg = jnp.sum(new_doc).astype(IDX)
+    total_valid = jnp.sum(is_doc).astype(IDX)
+    seg_starts = jnp.zeros(max_buf + 1, IDX).at[
+        jnp.where(new_doc, seg_id, max_buf + 1)
+    ].set(pos, mode="drop")
+    seg_starts = jnp.where(
+        jnp.arange(max_buf + 1, dtype=IDX) < nseg, seg_starts, total_valid
+    )
+    # tf of segment s = cums[start of s+1] - cums[start of s]
+    tf = cums[seg_starts[1:]] - cums[seg_starts[:-1]]
+    seg_docs = s_docs[jnp.minimum(seg_starts[:max_buf], max_buf - 1)]
+    seg_valid = jnp.arange(max_buf, dtype=IDX) < nseg
+    seg_docs = jnp.where(seg_valid, seg_docs, big)
+    tf = jnp.where(seg_valid, tf, 0)
+    return seg_docs, tf, nseg
+
+
+def pdl_topk(
+    index: PDLIndex, csa: CSA, lo, hi, k: int, max_buf: int = 4096,
+    max_cover: int = 1024,
+):
+    """Top-k by term frequency (tf desc, id asc).  Returns (docs[k], tf[k])."""
+    seg_docs, tf, nseg = pdl_doc_freqs(index, csa, lo, hi, max_buf, max_cover)
+    big = jnp.iinfo(jnp.int32).max
+    seg_valid = jnp.arange(max_buf, dtype=IDX) < nseg
+    # rank by (tf desc, doc asc)
+    negtf = jnp.where(seg_valid, -tf, big)
+    dkey = jnp.where(seg_valid, seg_docs, big)
+    order2 = jnp.lexsort((dkey, negtf))
+    topd = dkey[order2[:k]]
+    topf = -negtf[order2[:k]]
+    ok = jnp.arange(k, dtype=IDX) < jnp.minimum(nseg, k)
+    return (
+        jnp.where(ok, topd, -1).astype(IDX),
+        jnp.where(ok, topf, 0).astype(IDX),
+    )

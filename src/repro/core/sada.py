@@ -1,0 +1,246 @@
+"""Sadakane's document-counting structure, engineered for repetitiveness
+(Section 5).
+
+The structure: for the binary suffix tree, H[i] = h(v) (redundant suffixes)
+listed in inorder; encoded in unary as bitvector H' (one '1' per slot, then
+H[i] '0's).  Given the locus range [lo, hi) of P,
+
+    df = (hi - lo) - sum_{slots k in (lo, hi)} H[k]
+
+and the sum is two select_1 operations on H' (Section 5.1).
+
+Construction here avoids explicit binarization by combining the paper's
+reordering trick (Section 5.2 item 1 — only per-original-node sums matter)
+with a pair-charging argument: every *adjacent same-document pair*
+(i, nextocc(i)) is one redundant suffix, resolved exactly at the LCA of the
+two SA positions.  Charging the pair to the slot at the leftmost minimum of
+LCP[i+1..j] places it inside that LCA's slot range, so every node-aligned
+subtree sum is exact — a fully vectorized O(n lg n) build.
+
+Encodings (Section 6.4.1): the same H values can be wrapped as
+  * Sada      — plain bitvector H'
+  * Sada-RR   — run-length encoded H' (delta-coded model)
+  * Sada-S    — sparse (Elias-Fano) H'
+  * Sada-S-S  — sparse H' restricted to H > 1 slots + sparse 1-filter F_1
+  * Sada-F-P  — sparse filter F_S (H > 0) + plain H' over nonzero slots
+All variants answer the same query through rank/select; they differ in the
+working bitvector family and the modeled compressed size.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32, pytree_dataclass
+from repro.core.suffix import SuffixData
+from repro.succinct.bitvector import (
+    PlainBitvector,
+    RLEBitvector,
+    SparseBitvector,
+    plain_from_bits,
+    rle_from_bits,
+    sparse_from_bits,
+)
+
+VARIANTS = ("plain", "rle", "sparse", "sparse_sparse", "filter_plain")
+
+
+# ---------------------------------------------------------------------------
+# Build: H slot values
+# ---------------------------------------------------------------------------
+
+
+def _argmin_table(values: np.ndarray):
+    """numpy sparse table of leftmost argmins (build-time batched RMQ)."""
+    n = len(values)
+    levels = max(1, int(np.floor(np.log2(max(n, 1)))) + 1)
+    table = [np.arange(n, dtype=np.int64)]
+    for k in range(1, levels):
+        half = 1 << (k - 1)
+        prev = table[-1]
+        right_idx = np.minimum(np.arange(n) + half, n - 1)
+        right = prev[right_idx]
+        left = prev
+        take_right = values[right] < values[left]
+        table.append(np.where(take_right, right, left))
+    return table
+
+
+def _batch_leftmost_argmin(values, table, lo, hi):
+    """Leftmost argmin of values[lo..hi] inclusive, vectorized over arrays."""
+    lo = np.asarray(lo, dtype=np.int64)
+    hi = np.asarray(hi, dtype=np.int64)
+    span = np.maximum(hi - lo + 1, 1)
+    k = np.floor(np.log2(span)).astype(np.int64)
+    kmax = len(table) - 1
+    k = np.minimum(k, kmax)
+    a = np.empty(len(lo), dtype=np.int64)
+    b = np.empty(len(lo), dtype=np.int64)
+    for kk in np.unique(k):
+        m = k == kk
+        a[m] = table[kk][lo[m]]
+        b[m] = table[kk][np.maximum(hi[m] - (1 << int(kk)) + 1, lo[m])]
+    va = values[a]
+    vb = values[b]
+    pick_b = (vb < va) | ((vb == va) & (b < a))
+    return np.where(pick_b, b, a)
+
+
+def compute_h_slots(data: SuffixData) -> np.ndarray:
+    """H[k] for slots k in [1, n): redundant-suffix counts charged to the
+    leftmost-minimum LCP slot of each adjacent same-document pair."""
+    n = data.n
+    H = np.zeros(n, dtype=np.int64)
+    c = np.asarray(data.c)
+    # next-occurrence pairs: (c[i], i) for c[i] >= 0
+    j = np.flatnonzero(c >= 0)
+    i = c[j].astype(np.int64)
+    if len(j) == 0:
+        return H
+    lcp = np.asarray(data.lcp, dtype=np.int64)
+    table = _argmin_table(lcp)
+    k = _batch_leftmost_argmin(lcp, table, i + 1, j)
+    np.add.at(H, k, 1)
+    H[0] = 0
+    return H
+
+
+# ---------------------------------------------------------------------------
+# Encodings
+# ---------------------------------------------------------------------------
+
+
+def _unary_bits(values: np.ndarray) -> np.ndarray:
+    """'1' + v '0's per value."""
+    total = len(values) + int(values.sum())
+    bits = np.zeros(total, dtype=np.uint8)
+    pos = np.cumsum(np.concatenate([[0], values[:-1] + 1])) if len(values) else np.zeros(0, np.int64)
+    bits[pos.astype(np.int64)] = 1
+    return bits
+
+
+@pytree_dataclass(meta=("n", "variant", "num_slots"))
+class SadaCount:
+    """One of the Section 6.4.1 encodings of Sadakane's structure.
+
+    hp:  unary H' bitvector (full, or restricted per the variant)
+    fs:  sparse filter over slots (meaning depends on variant; dummy when
+         unused — the static ``variant`` decides the code path)
+    f1:  sparse 1-filter (slots with H == 1)
+    """
+
+    hp: PlainBitvector | RLEBitvector | SparseBitvector
+    fs: SparseBitvector
+    f1: SparseBitvector
+    n: int
+    variant: str
+    num_slots: int
+
+    def modeled_bits(self) -> int:
+        bits = self.hp.modeled_bits()
+        if self.variant in ("sparse_sparse", "filter_plain"):
+            bits += self.fs.modeled_bits()
+        if self.variant == "sparse_sparse":
+            bits += self.f1.modeled_bits()
+        return bits
+
+
+def _dummy_sparse(n: int) -> SparseBitvector:
+    return sparse_from_bits(np.zeros(max(n, 1), dtype=np.uint8))
+
+
+def build_sada(data: SuffixData, variant: str = "plain") -> SadaCount:
+    assert variant in VARIANTS
+    n = data.n
+    H = compute_h_slots(data)  # H[0] unused; slots 1..n-1
+    slots = H[1:]
+    num_slots = len(slots)
+
+    fs = _dummy_sparse(n)
+    f1 = _dummy_sparse(n)
+
+    if variant in ("plain", "rle", "sparse"):
+        bits = _unary_bits(slots)
+        if variant == "plain":
+            hp = plain_from_bits(bits)
+        elif variant == "rle":
+            hp = rle_from_bits(bits)
+        else:
+            hp = sparse_from_bits(bits)
+    elif variant == "filter_plain":
+        # F_S marks slots with H > 0 (offset by +1 into slot space)
+        mask = slots > 0
+        fs_bits = np.zeros(n, dtype=np.uint8)
+        fs_bits[1:][mask] = 1
+        fs = sparse_from_bits(fs_bits)
+        hp = plain_from_bits(_unary_bits(slots[mask]))
+    else:  # sparse_sparse: F_S marks H > 1, F_1 marks H == 1
+        mask_gt1 = slots > 1
+        mask_eq1 = slots == 1
+        fs_bits = np.zeros(n, dtype=np.uint8)
+        fs_bits[1:][mask_gt1] = 1
+        f1_bits = np.zeros(n, dtype=np.uint8)
+        f1_bits[1:][mask_eq1] = 1
+        fs = sparse_from_bits(fs_bits)
+        f1 = sparse_from_bits(f1_bits)
+        hp = sparse_from_bits(_unary_bits(slots[mask_gt1]))
+
+    return SadaCount(hp=hp, fs=fs, f1=f1, n=n, variant=variant, num_slots=num_slots)
+
+
+# ---------------------------------------------------------------------------
+# Query
+# ---------------------------------------------------------------------------
+
+
+def _unary_prefix_sum(hp, t):
+    """sum of the first t unary-coded values = select1(t) - t  (select1 of an
+    out-of-range t returns the bitvector length, which keeps the identity)."""
+    return hp.select1(t) - t
+
+
+def sada_count(s: SadaCount, lo, hi):
+    """df for the locus range [lo, hi) — exact for suffix-tree-node-aligned
+    ranges (the structure's contract, as in the paper)."""
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    a = lo + 1  # slot ids are LCP positions; slots in (lo, hi)
+    b = hi
+
+    if s.variant in ("plain", "rle", "sparse"):
+        # stored slot t <-> slot id t + 1
+        a_ = a - 1
+        b_ = b - 1
+        dup = _unary_prefix_sum(s.hp, b_) - _unary_prefix_sum(s.hp, a_)
+    elif s.variant == "filter_plain":
+        a_ = s.fs.rank1(a)
+        b_ = s.fs.rank1(b)
+        dup = _unary_prefix_sum(s.hp, b_) - _unary_prefix_sum(s.hp, a_)
+    else:  # sparse_sparse
+        ones = s.f1.rank1(b) - s.f1.rank1(a)
+        a_ = s.fs.rank1(a)
+        b_ = s.fs.rank1(b)
+        dup = ones + _unary_prefix_sum(s.hp, b_) - _unary_prefix_sum(s.hp, a_)
+
+    df = (hi - lo) - dup
+    return jnp.where(hi > lo, df, 0).astype(IDX)
+
+
+def sada_count_batch(s: SadaCount, lo, hi):
+    return jax.vmap(lambda a, b: sada_count(s, a, b))(as_i32(lo), as_i32(hi))
+
+
+# ---------------------------------------------------------------------------
+# Analysis helper (Fig 5): runs of 1s in H'
+# ---------------------------------------------------------------------------
+
+
+def hprime_runs_of_ones(data: SuffixData) -> int:
+    H = compute_h_slots(data)[1:]
+    bits = _unary_bits(H)
+    if len(bits) == 0:
+        return 0
+    starts = (bits[1:] == 1) & (bits[:-1] == 0)
+    return int(starts.sum()) + int(bits[0] == 1)

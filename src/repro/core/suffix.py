@@ -1,0 +1,322 @@
+"""Suffix-array machinery: SA, LCP, document array, C array, ILCP inputs.
+
+Construction strategy (TPU-native, DESIGN.md Section 2.3):
+
+* The suffix array is built by **prefix doubling** — O(lg n) rounds of
+  ``lexsort`` — because sorting is the parallel primitive accelerators are
+  good at (SA-IS-style induced copying is inherently sequential pointer
+  chasing).  Each round is pure vectorized dataflow.
+
+* The per-round rank tables are retained; any pairwise LCP between two text
+  positions is then an O(lg n) *vectorized descent* over the tables.  This
+  one primitive produces: the global LCP array (adjacent SA entries), the
+  classic C array of Muthukrishnan (previous same-document occurrence), and
+  the ILCP array of the paper (Definition 1) — because Lemma 1's
+  order-preservation argument makes ILCP[i] the within-document LCP of
+  SA[i] against the *previous same-document* suffix in SA order, and
+  per-document sentinels make within-document LCP equal global char-LCP.
+
+Sentinel semantics (paper-faithful): documents are concatenated with a
+shared terminator symbol 0 ("$") after each, lexicographically smaller than
+every regular symbol, and suffix comparison continues *past* terminators —
+i.e. SA is the plain suffix array of the concatenation T.  The paper's
+running example fixes this choice (its SA orders "$" < "$AAAA$" <
+"$LATA$...").  Two suffixes of the *same* document can never tie through
+that document's terminator, so Lemma 1's order-preservation argument holds,
+and within-document LCPs equal global char-LCPs.  A bonus of the
+single-string view: the FM-index LF identity is exact with no multi-$
+caveats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX
+
+
+# ---------------------------------------------------------------------------
+# Collection assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Collection:
+    """A concatenated document collection T = S_0 $ S_1 $ ... $ S_{d-1} $.
+
+    text:       int32[n]   symbols; 0 is the per-document terminator
+    doc_starts: int32[d]   start offset of each document
+    doc_ends:   int32[d]   offset of each document's terminator
+    d:          number of documents
+    sigma:      alphabet size including the terminator (max symbol + 1)
+    """
+
+    text: np.ndarray
+    doc_starts: np.ndarray
+    doc_ends: np.ndarray
+    d: int
+    sigma: int
+
+    @property
+    def n(self) -> int:
+        return int(self.text.shape[0])
+
+    def doc_of(self, pos: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.doc_starts, pos, side="right") - 1
+
+
+def concat_documents(docs: Sequence) -> Collection:
+    """Concatenate documents (strings or int arrays) with terminators.
+
+    String documents are mapped byte-wise to [1, 256]; integer documents
+    must be >= 0 and are shifted by +1 so that 0 is free for the terminator.
+    """
+    arrays = []
+    for doc in docs:
+        if isinstance(doc, str):
+            a = np.frombuffer(doc.encode("utf-8"), dtype=np.uint8).astype(np.int32) + 1
+        else:
+            a = np.asarray(doc, dtype=np.int32) + 1
+            if a.size and a.min() < 1:
+                raise ValueError("integer documents must have symbols >= 0")
+        arrays.append(a)
+    starts, ends, parts = [], [], []
+    off = 0
+    for a in arrays:
+        starts.append(off)
+        parts.append(a)
+        off += len(a)
+        ends.append(off)
+        parts.append(np.zeros(1, dtype=np.int32))
+        off += 1
+    text = np.concatenate(parts) if parts else np.zeros(0, dtype=np.int32)
+    sigma = int(text.max()) + 1 if text.size else 1
+    return Collection(
+        text=text,
+        doc_starts=np.asarray(starts, dtype=np.int32),
+        doc_ends=np.asarray(ends, dtype=np.int32),
+        d=len(arrays),
+        sigma=sigma,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefix-doubling suffix array (device) + retained rank tables
+# ---------------------------------------------------------------------------
+
+
+def _initial_ranks(coll: Collection) -> np.ndarray:
+    """Initial single-symbol ranks.  The terminator (symbol 0) is shared by
+    all documents and smaller than every regular symbol — plain suffix-array
+    semantics of the concatenation, as in the paper's running example."""
+    text = coll.text
+    order = np.argsort(text, kind="stable")
+    sorted_keys = text[order]
+    new_group = np.empty(len(text), dtype=np.int64)
+    if len(text):
+        new_group[0] = 0
+        new_group[1:] = (sorted_keys[1:] != sorted_keys[:-1]).astype(np.int64)
+    dense = np.cumsum(new_group) if len(text) else new_group
+    rank = np.empty(len(text), dtype=np.int64)
+    rank[order] = dense
+    return rank.astype(np.int32)
+
+
+def suffix_array_doubling(coll: Collection, keep_tables: bool = True):
+    """Return (sa, rank_tables) where rank_tables[j] ranks length-2^j
+    substrings (rank_tables[0] = single-symbol ranks with distinct
+    sentinels).  All rounds run as device-parallel sorts.
+    """
+    n = coll.n
+    if n == 0:
+        return np.zeros(0, np.int32), [np.zeros(0, np.int32)]
+    rank = jnp.asarray(_initial_ranks(coll))
+    tables = [np.asarray(rank)] if keep_tables else []
+    idx = jnp.arange(n, dtype=IDX)
+    k = 1
+    sa = jnp.argsort(rank)  # valid if ranks already unique
+    while True:
+        if int(jax.device_get(rank.max())) == n - 1:
+            sa = jnp.argsort(rank)
+            break
+        key2 = jnp.where(idx + k < n, rank[jnp.minimum(idx + k, n - 1)], -1)
+        order = jnp.lexsort((key2, rank))
+        r_s = rank[order]
+        k_s = key2[order]
+        boundary = jnp.concatenate(
+            [
+                jnp.zeros(1, IDX),
+                ((r_s[1:] != r_s[:-1]) | (k_s[1:] != k_s[:-1])).astype(IDX),
+            ]
+        )
+        dense = jnp.cumsum(boundary)
+        rank = jnp.zeros(n, IDX).at[order].set(dense)
+        if keep_tables:
+            tables.append(np.asarray(rank))
+        sa = order
+        k *= 2
+        if k >= 2 * n:  # all suffixes must be distinct by now
+            break
+    return np.asarray(sa, dtype=np.int32), tables
+
+
+def pairwise_lcp(tables: list, a: np.ndarray, b: np.ndarray, n: int) -> np.ndarray:
+    """Vectorized char-LCP of suffixes starting at positions a and b.
+
+    Descends the doubling rank tables from the widest span: if the ranks of
+    length-2^j windows match, those 2^j symbols are equal (terminators are
+    ordinary symbols under the shared-$ semantics, matching the paper's
+    plain char-LCP over T).
+    """
+    a = np.asarray(a, dtype=np.int64).copy()
+    b = np.asarray(b, dtype=np.int64).copy()
+    res = np.zeros(a.shape, dtype=np.int64)
+    for j in range(len(tables) - 1, -1, -1):
+        span = 1 << j
+        ai = a + res
+        bi = b + res
+        ok = (ai < n) & (bi < n)
+        ai_c = np.minimum(ai, n - 1)
+        bi_c = np.minimum(bi, n - 1)
+        t = tables[j]
+        ok &= t[ai_c] == t[bi_c]
+        res = np.where(ok, res + span, res)
+    return res.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Full build product
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SuffixData:
+    """Host-side build artifact shared by every index in repro.core.
+
+    sa:    int32[n]  suffix array
+    rank:  int32[n]  inverse permutation of sa
+    lcp:   int32[n]  global LCP array (lcp[0] = 0)
+    da:    int32[n]  document array
+    c:     int32[n]  Muthukrishnan's C: previous position with same document
+                     (-1 if none) — in SA order
+    ilcp:  int32[n]  interleaved LCP array (Definition 1)
+    """
+
+    coll: Collection
+    sa: np.ndarray
+    rank: np.ndarray
+    lcp: np.ndarray
+    da: np.ndarray
+    c: np.ndarray
+    ilcp: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.coll.n
+
+    @property
+    def d(self) -> int:
+        return self.coll.d
+
+
+def build_suffix_data(coll: Collection) -> SuffixData:
+    n = coll.n
+    sa, tables = suffix_array_doubling(coll)
+    rank = np.empty(n, dtype=np.int32)
+    rank[sa] = np.arange(n, dtype=np.int32)
+
+    # global LCP (adjacent SA entries)
+    lcp = np.zeros(n, dtype=np.int32)
+    if n > 1:
+        lcp[1:] = pairwise_lcp(tables, sa[:-1], sa[1:], n)
+
+    # document array
+    da = (np.searchsorted(coll.doc_starts, sa, side="right") - 1).astype(np.int32)
+
+    # C array: previous SA position with the same document
+    c = np.full(n, -1, dtype=np.int32)
+    order = np.argsort(da, kind="stable")  # groups docs, increasing SA pos
+    da_sorted = da[order]
+    prev = np.full(n, -1, dtype=np.int64)
+    same_doc = np.zeros(n, dtype=bool)
+    if n > 1:
+        same_doc[1:] = da_sorted[1:] == da_sorted[:-1]
+    prev[1:] = order[:-1]
+    c[order] = np.where(same_doc, prev, -1).astype(np.int32)
+
+    # ILCP via Lemma 1: within-document LCP against previous same-doc suffix
+    ilcp = np.zeros(n, dtype=np.int32)
+    has_prev = c >= 0
+    if has_prev.any():
+        cur_pos = sa[has_prev]
+        prev_pos = sa[c[has_prev]]
+        ilcp[has_prev] = pairwise_lcp(tables, prev_pos, cur_pos, n)
+
+    return SuffixData(coll=coll, sa=sa, rank=rank, lcp=lcp, da=da, c=c, ilcp=ilcp)
+
+
+# ---------------------------------------------------------------------------
+# Naive oracles (used by tests and small-scale validation)
+# ---------------------------------------------------------------------------
+
+
+def naive_suffix_array(coll: Collection) -> np.ndarray:
+    """O(n^2 log n) reference: plain suffix comparison of T (shared $)."""
+    text = coll.text
+    suffixes = sorted(range(coll.n), key=lambda i: tuple(text[i:]))
+    return np.asarray(suffixes, dtype=np.int32)
+
+
+def naive_lcp_of(coll: Collection, a: int, b: int) -> int:
+    text = coll.text
+    h = 0
+    while a + h < coll.n and b + h < coll.n and text[a + h] == text[b + h]:
+        h += 1
+    return h
+
+
+def encode_pattern(pattern) -> np.ndarray:
+    """Map a query pattern to symbol space the same way concat_documents
+    maps documents (strings byte-wise +1; ints +1)."""
+    if isinstance(pattern, str):
+        return np.frombuffer(pattern.encode("utf-8"), dtype=np.uint8).astype(
+            np.int32
+        ) + 1
+    return np.asarray(pattern, dtype=np.int32) + 1
+
+
+def sa_range_for_pattern(data: SuffixData, pattern) -> tuple[int, int]:
+    """[lo, hi) SA range of suffixes prefixed by pattern (symbol space), by
+    binary search on the suffix array (host-side reference; the CSA module
+    provides the compressed backward search used at serving time)."""
+    text = data.coll.text
+    n = data.n
+    pattern = np.asarray(pattern, dtype=np.int32)
+    m = len(pattern)
+    pat = tuple(int(x) for x in pattern)
+
+    def prefix_of(i):
+        seg = text[i : i + m]
+        return tuple(int(x) for x in seg) + ((-1,) * (m - len(seg)))
+
+    lo, hi = 0, n
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if prefix_of(int(data.sa[mid])) < pat:
+            lo = mid + 1
+        else:
+            hi = mid
+    start = lo
+    lo, hi = start, n
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if prefix_of(int(data.sa[mid])) <= pat:
+            lo = mid + 1
+        else:
+            hi = mid
+    return start, lo

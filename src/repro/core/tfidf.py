@@ -1,0 +1,207 @@
+"""TF-IDF ranked multi-term queries (Section 6.5).
+
+The index composition is exactly the paper's: RLCSA-style CSA for term
+ranges, PDL (+F) as the abstract per-term inverted lists, and a Sadakane
+counting structure for document frequencies.  Weights:
+
+    w(D, Q) = sum_i f(tf(D, q_i)) * g(df(q_i)),
+    f(tf) = tf,   g(df) = lg(d / max(df, 1)).
+
+Two query engines:
+
+* ``tfidf_topk`` — exact batched engine: every term's (doc, tf) pairs are
+  fully aggregated (PDL decompress + brute merge, the strategy the paper
+  found fastest for PDL merging), scores summed by document, ranked-AND
+  filters documents that miss any term.  One jitted program; vmap over a
+  padded batch of queries.
+
+* ``tfidf_topk_incremental`` — the paper's k' = 2k, 4k, ... loop with
+  lower/upper score bounds and early termination, host-orchestrated over
+  jitted per-term extractions.  Returns the same top-k set (weights of a
+  disjunctive early stop may be partial, as the paper notes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32
+from repro.core.csa import CSA
+from repro.core.pdl import PDLIndex, pdl_doc_freqs, pdl_topk
+from repro.core.sada import SadaCount, sada_count
+
+BIG = np.iinfo(np.int32).max
+
+
+def idf_weight(d: int, df):
+    """g(df) = lg(d / max(df, 1))."""
+    df = jnp.maximum(df, 1).astype(jnp.float32)
+    return jnp.log2(jnp.float32(d) / df)
+
+
+def tfidf_topk(
+    pdl: PDLIndex,
+    csa: CSA,
+    sada: SadaCount,
+    ranges,            # int32[T, 2] (lo, hi) per term; empty terms lo >= hi
+    term_valid,        # bool[T]
+    k: int,
+    conjunctive: bool,
+    max_buf: int = 2048,
+):
+    """Exact ranked-AND / ranked-OR top-k.  Returns (docs[k], scores[k])."""
+    ranges = as_i32(ranges)
+    T = ranges.shape[0]
+    term_valid = jnp.asarray(term_valid, dtype=jnp.bool_)
+
+    def per_term(rng, tv):
+        lo, hi = rng[0], rng[1]
+        docs, tf, nseg = pdl_doc_freqs(pdl, csa, lo, hi, max_buf=max_buf)
+        df = sada_count(sada, lo, hi)
+        w = idf_weight(pdl.d, df)
+        score = tf.astype(jnp.float32) * w
+        keep = tv & (jnp.arange(max_buf, dtype=IDX) < nseg)
+        docs = jnp.where(keep, docs, BIG)
+        score = jnp.where(keep, score, 0.0)
+        return docs, score
+
+    docs_t, score_t = jax.vmap(per_term)(ranges, term_valid)
+    flat_docs = docs_t.reshape(-1)
+    flat_scores = score_t.reshape(-1)
+    M = flat_docs.shape[0]
+
+    order = jnp.argsort(flat_docs)
+    s_docs = flat_docs[order]
+    s_scores = flat_scores[order]
+    present = (s_docs < BIG).astype(IDX)
+
+    first = jnp.concatenate([jnp.ones(1, jnp.bool_), s_docs[1:] != s_docs[:-1]])
+    new_doc = first & (s_docs < BIG)
+    seg_id = jnp.cumsum(new_doc) - 1
+    nseg = jnp.sum(new_doc).astype(IDX)
+    total_valid = jnp.sum(present).astype(IDX)
+
+    pos = jnp.arange(M, dtype=IDX)
+    seg_starts = jnp.zeros(M + 1, IDX).at[
+        jnp.where(new_doc, seg_id, M + 1)
+    ].set(pos, mode="drop")
+    seg_starts = jnp.where(jnp.arange(M + 1, dtype=IDX) < nseg, seg_starts, total_valid)
+
+    cum_score = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(s_scores)])
+    cum_present = jnp.concatenate([jnp.zeros(1, IDX), jnp.cumsum(present)])
+    seg_score = cum_score[seg_starts[1:]] - cum_score[seg_starts[:-1]]
+    seg_terms = cum_present[seg_starts[1:]] - cum_present[seg_starts[:-1]]
+    seg_docs = s_docs[jnp.minimum(seg_starts[:M], M - 1)]
+    seg_ok = jnp.arange(M, dtype=IDX) < nseg
+
+    n_required = jnp.sum(term_valid.astype(IDX))
+    if conjunctive:
+        seg_ok = seg_ok & (seg_terms == n_required)
+
+    # rank by (score desc, doc asc)
+    neg = jnp.where(seg_ok, -seg_score, jnp.float32(np.inf))
+    dkey = jnp.where(seg_ok, seg_docs, BIG)
+    order2 = jnp.lexsort((dkey, neg))
+    topd = dkey[order2[:k]]
+    tops = -neg[order2[:k]]
+    ok = topd < BIG
+    return (
+        jnp.where(ok, topd, -1).astype(IDX),
+        jnp.where(ok, tops, 0.0).astype(jnp.float32),
+    )
+
+
+def tfidf_topk_batch(
+    pdl, csa, sada, ranges_batch, term_valid_batch, k, conjunctive, max_buf=2048
+):
+    """vmap over a [Q, T, 2] batch of padded queries."""
+    return jax.vmap(
+        lambda r, tv: tfidf_topk(pdl, csa, sada, r, tv, k, conjunctive, max_buf)
+    )(as_i32(ranges_batch), jnp.asarray(term_valid_batch, dtype=jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# The paper's incremental algorithm (Section 6.5 numbered loop)
+# ---------------------------------------------------------------------------
+
+
+def tfidf_topk_incremental(
+    pdl: PDLIndex,
+    csa: CSA,
+    sada: SadaCount,
+    ranges: np.ndarray,   # [T, 2] host array
+    k: int,
+    conjunctive: bool,
+    max_buf: int = 2048,
+):
+    """Host-orchestrated k' doubling with score bounds.
+
+    Step 1-6 of Section 6.5: extract k' docs per term (PDL lists are sorted
+    by tf), maintain lower/upper bounds on w(D, Q), stop when the top-k set
+    is provably stable.  Returns (docs list, lower-bound scores list).
+    """
+    T = len(ranges)
+    d = pdl.d
+    dfs = [int(sada_count(sada, int(lo), int(hi))) for lo, hi in ranges]
+    gs = [float(np.log2(d / max(df, 1))) for df in dfs]
+
+    # full per-term lists (tf-sorted); the incremental loop reads prefixes,
+    # the conjunctive filter checks membership against the complete lists
+    # ("completely decompressed document lists", step 2)
+    full: list[tuple[np.ndarray, np.ndarray]] = []
+    full_maps: list[dict[int, int]] = []
+    for lo, hi in ranges:
+        docs, tf = pdl_topk(pdl, csa, int(lo), int(hi), min(max_buf, pdl.d))
+        docs = np.asarray(docs)
+        tf = np.asarray(tf)
+        keep = docs >= 0
+        full.append((docs[keep], tf[keep]))
+        full_maps.append({int(a): int(b) for a, b in zip(docs[keep], tf[keep])})
+
+    kp = 2 * k
+    while True:
+        # step 1: extract k' more documents per term
+        prefix: dict[int, dict[int, int]] = {}
+        next_tf = []
+        for t in range(T):
+            docs, tf = full[t]
+            head = min(kp, len(docs))
+            for j in range(head):
+                prefix.setdefault(int(docs[j]), {})[t] = int(tf[j])
+            next_tf.append(int(tf[head]) if head < len(docs) else 0)
+
+        # steps 3-4: lower / upper bounds for every extracted document
+        lower, upper = {}, {}
+        for doc, seen in prefix.items():
+            lower[doc] = sum(seen.get(t, 0) * gs[t] for t in range(T))
+            upper[doc] = sum(
+                (seen[t] if t in seen else next_tf[t]) * gs[t] for t in range(T)
+            )
+
+        # step 2: conjunctive filter against complete lists
+        if conjunctive:
+            cand = {
+                doc: w
+                for doc, w in lower.items()
+                if all(doc in full_maps[t] for t in range(T))
+            }
+        else:
+            cand = lower
+
+        ranked = sorted(cand.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+        exhausted = all(kp >= len(full[t][0]) for t in range(T))
+        if exhausted:
+            return [doc for doc, _ in ranked], [w for _, w in ranked]
+
+        # steps 5-6: early termination when the top-k set cannot change
+        kth = ranked[k - 1][1] if len(ranked) >= k else -np.inf
+        unseen_upper = sum(next_tf[t] * gs[t] for t in range(T))
+        top_set = {doc for doc, _ in ranked}
+        seen_safe = all(
+            upper[doc] <= kth for doc in cand if doc not in top_set
+        )
+        if len(ranked) >= k and unseen_upper <= kth and seen_safe:
+            return [doc for doc, _ in ranked], [w for _, w in ranked]
+        kp *= 2

@@ -1,0 +1,4 @@
+"""Data pipelines: the paper's document collections (real-life analogue
+generators + the synthetic DNA/Concat/Version families of Section 6.1.1),
+query workloads (Section 6.1.2), LM token batches, graph sampling, and
+Criteo-like recsys batches."""

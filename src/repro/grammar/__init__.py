@@ -1,0 +1,19 @@
+"""Grammar compression: Re-Pair (Larsson & Moffat 2000) for sequences and
+document sets — the compressor behind PDL (Section 4) and the Grammar
+baseline (Claude & Munro 2013)."""
+
+from repro.grammar.repair import (
+    Grammar,
+    repair_compress,
+    repair_compress_lists,
+    repair_expand_host,
+    modeled_bits_grammar,
+)
+
+__all__ = [
+    "Grammar",
+    "repair_compress",
+    "repair_compress_lists",
+    "repair_expand_host",
+    "modeled_bits_grammar",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+rank            — batched bitvector rank (popcount)           [paper 2.2/5.1]
+rmq             — batched sparse-table range-minimum           [paper 2.3/3.3]
+embedding_bag   — fused gather+reduce over embedding tables    [recsys archs]
+flash_attention — blocked online-softmax attention             [LM archs]
+
+Each kernel ships with a pure-jnp oracle in ref.py; tests sweep shapes and
+dtypes against it in interpret mode (this container is CPU-only; TPU is the
+compile target).
+"""
+
+from repro.kernels.ops import embedding_bag, flash_attention, rank, rmq
+
+__all__ = ["rank", "rmq", "embedding_bag", "flash_attention"]

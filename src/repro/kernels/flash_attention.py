@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blocked (flash) attention with online softmax.
+
+Used by the LM-family train/prefill steps.  Grid is (batch, heads,
+q_blocks); each step keeps a [block_q, Dh] query tile plus running
+(max, denominator, accumulator) in VMEM/registers and streams K/V in
+[block_k, Dh] tiles with ``fori_loop`` + dynamic slices, so the S x S score
+matrix never materializes.  MXU alignment: block_q/block_k multiples of
+128, Dh = 128 for all assigned archs.
+
+Causal semantics support self-attention (S_q == S_kv) and KV-extended
+decode/prefill windows (S_kv >= S_q, query i attends to
+positions <= S_kv - S_q + i).
+
+GQA is handled above the kernel (repro.models.attention) by reshaping KV
+heads; the kernel sees matched Q/KV head counts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, causal, scale, s_kv, s_q):
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [BQ, Dh]
+    bq = q.shape[0]
+    qi = pl.program_id(2)
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)      # global query rows
+    offset = s_kv - s_q
+
+    nkv = s_kv // block_k
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, 0, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        logits = q @ k.T                               # [BQ, BK]
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = k_pos[None, :] <= (q_pos[:, None] + offset)
+            logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, q.shape[1]), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkv, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_diff(q, k, v, causal, block_q, block_k, interpret):
+    return _flash_forward(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    out = _flash_diff(q, k, v, causal, block_q, block_k, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
+    """Backward pass via recompute against the reference math.
+
+    On TPU the production backward is its own flash kernel (dq/dk/dv tiles
+    with the stored log-sum-exp); the recompute VJP keeps training exact
+    while the forward takes the Pallas path.
+    """
+    from repro.kernels import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=causal), q, k, v
+    )
+    return vjp(g)
+
+
+_flash_diff.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_pallas(
+    q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True
+):
+    """Differentiable entry point: Pallas forward + custom VJP."""
+    return _flash_diff(q, k, v, causal, block_q, block_k, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def _flash_forward(
+    q: jnp.ndarray,  # [B, H, Sq, Dh]
+    k: jnp.ndarray,  # [B, H, Skv, Dh]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    B, H, Sq, Dh = q.shape
+    Skv = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv, block_q, block_k)
+    scale = Dh ** -0.5
+    grid = (B, H, Sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_k=block_k,
+            causal=causal,
+            scale=scale,
+            s_kv=Skv,
+            s_q=Sq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, Dh), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, Dh), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

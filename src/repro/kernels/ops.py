@@ -1,0 +1,60 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: Pallas interpret mode on CPU (this
+container), compiled Mosaic on TPU.  Every wrapper falls back to the pure
+jnp reference when the input shapes don't meet the kernel's tiling
+constraints — the framework never fails on odd shapes, it just takes the
+XLA path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rank import rank_pallas
+from repro.kernels.rmq import rmq_pallas
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def rank(words, ones_prefix, idx, *, block_q=1024, interpret=None):
+    return rank_pallas(
+        words, ones_prefix, idx, block_q=block_q,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def rmq(values, table, lo, hi, *, block_q=1024, interpret=None):
+    return rmq_pallas(
+        values, table, lo, hi, block_q=block_q,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def embedding_bag(table, padded_idx, *, mode="sum", block_b=128, interpret=None):
+    return embedding_bag_pallas(
+        table, padded_idx, mode=mode, block_b=block_b,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def flash_attention(
+    q, k, v, *, causal=True, block_q=128, block_k=128, interpret=None
+):
+    Sq, Skv = q.shape[2], k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    if Sq % bq or Skv % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=bq, block_k=bk,
+        interpret=_auto_interpret(interpret),
+    )

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rank_ref(words: jnp.ndarray, ones_prefix: jnp.ndarray, idx: jnp.ndarray):
+    """Batched rank1: ones in bits [0, idx) of the packed bitvector.
+
+    words: uint32[W(+1)], ones_prefix: int32[W+1], idx: int32[Q].
+    """
+    w = idx >> 5
+    off = (idx & 31).astype(jnp.uint32)
+    word = words[w]
+    mask = (jnp.uint32(1) << off) - jnp.uint32(1)
+    return ones_prefix[w] + jax.lax.population_count(word & mask).astype(jnp.int32)
+
+
+def rmq_ref(values: jnp.ndarray, table: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray):
+    """Batched leftmost-argmin over values[lo..hi] via the sparse table.
+
+    table: int32[Lv, n] (argmin of 2^k windows), lo/hi: int32[Q] inclusive.
+    """
+    span = jnp.maximum(hi - lo + 1, 1)
+    k = 31 - jax.lax.clz(span)
+    k = jnp.clip(k, 0, table.shape[0] - 1)
+    a = table[k, lo]
+    b = table[k, jnp.maximum(hi - (jnp.int32(1) << k) + 1, lo)]
+    va = values[a]
+    vb = values[b]
+    pick_b = (vb < va) | ((vb == va) & (b < a))
+    return jnp.where(pick_b, b, a).astype(jnp.int32)
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray, indices: jnp.ndarray, offsets: jnp.ndarray, mode: str = "sum"
+):
+    """EmbeddingBag: per-bag reduction of gathered rows.
+
+    table: f[V, D]; indices: int32[N]; offsets: int32[B+1] (bag b spans
+    indices[offsets[b]:offsets[b+1]]).  Returns f[B, D].
+    Implemented with take + segment_sum — the pattern the assignment calls
+    out as the system's own responsibility in JAX.
+    """
+    rows = jnp.take(table, indices, axis=0)
+    nbags = offsets.shape[0] - 1
+    seg = jnp.repeat(
+        jnp.arange(nbags, dtype=jnp.int32),
+        offsets[1:] - offsets[:-1],
+        total_repeat_length=indices.shape[0],
+    )
+    summed = jax.ops.segment_sum(rows, seg, num_segments=nbags)
+    if mode == "sum":
+        return summed
+    if mode == "mean":
+        counts = (offsets[1:] - offsets[:-1]).astype(summed.dtype)
+        return summed / jnp.maximum(counts, 1)[:, None]
+    raise ValueError(mode)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True,
+    scale: float | None = None,
+):
+    """Reference attention: q,k,v [B, H, S, Dh] -> [B, H, S, Dh] (f32 math)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), dtype=bool), k.shape[2] - s)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

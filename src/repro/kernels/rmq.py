@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched sparse-table RMQ (leftmost argmin).
+
+The document-listing recursion (Sections 2.3 / 3.3) issues one RMQ per
+reported document; a serving batch issues thousands.  Each query is two
+VMEM gathers + a compare:
+
+    k = floor(lg(hi - lo + 1))
+    a = T[k, lo];  b = T[k, hi - 2^k + 1];  pick leftmost min.
+
+The table rows are flattened so the (k, pos) gather is a single 1-D VMEM
+gather (TPU-friendly).  Queries stream through the grid in blocks; the
+table/values are VMEM-resident per step (tables for run-head arrays are
+rho lg rho words — small on repetitive collections, which is exactly the
+paper's regime).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmq_kernel(lo_ref, hi_ref, values_ref, table_ref, out_ref, *, levels, n):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    values = values_ref[...]
+    table = table_ref[...]  # flattened [levels * n]
+    span = jnp.maximum(hi - lo + 1, 1)
+    k = 31 - jax.lax.clz(span)
+    k = jnp.clip(k, 0, levels - 1)
+    right = jnp.maximum(hi - (jnp.int32(1) << k) + 1, lo)
+    a = table[k * n + lo]
+    b = table[k * n + right]
+    va = values[a]
+    vb = values[b]
+    pick_b = (vb < va) | ((vb == va) & (b < a))
+    out_ref[...] = jnp.where(pick_b, b, a).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def rmq_pallas(
+    values: jnp.ndarray,
+    table: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    *,
+    block_q: int = 1024,
+    interpret: bool = True,
+):
+    """Batched leftmost-argmin of values[lo..hi] (inclusive)."""
+    levels, n = table.shape
+    q = lo.shape[0]
+    qpad = -(-q // block_q) * block_q
+    lo_p = jnp.zeros(qpad, jnp.int32).at[:q].set(lo)
+    hi_p = jnp.zeros(qpad, jnp.int32).at[:q].set(hi)
+    flat = table.reshape(-1)
+    out = pl.pallas_call(
+        functools.partial(_rmq_kernel, levels=levels, n=n),
+        grid=(qpad // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec(values.shape, lambda i: (0,)),
+            pl.BlockSpec(flat.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((qpad,), jnp.int32),
+        interpret=interpret,
+    )(lo_p, hi_p, values, flat)
+    return out[:q]

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out experiments/dryrun.json]
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...) \
+            .lower(*input_specs(arch))
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / HLO collective parse
+
+Success proves the sharding config is coherent: every parameter, optimizer
+moment, batch, and KV-cache dimension divides (or GSPMD-pads) over the
+(data, model) and (pod, data, model) meshes, and the per-device memory fits
+a 16 GB v5e chip.  The first two lines of this file pin the host platform
+to 512 fake devices BEFORE any jax import, as required.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.registry import ARCH_SHAPES, ALL_ARCHS, build_cell
+from repro.dist.roofline import parse_collectives, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+
+def _to_shardings(mesh, spec_tree, abstract_tree):
+    def conv(spec, _ab):
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        conv, spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cell = build_cell(arch, shape, mesh)
+    in_sh = _to_shardings(mesh, cell.in_specs, cell.abstract_args)
+    out_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cell.out_specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, scan_trips=cell.meta.get("scan_trips", 1))
+    rl = roofline_terms(
+        cell.meta, chips, coll.total_bytes,
+        raw_flops=float(cost.get("flops", 0.0)),
+        raw_bytes=float(cost.get("bytes accessed", 0.0)),
+    )
+
+    def _mb(x):
+        return None if x is None else round(x / 2**20, 2)
+
+    # Analytic per-device memory model (TPU-side estimate).  The CPU
+    # backend's memory_analysis over-reports for two reasons recorded in
+    # EXPERIMENTS.md: (a) its float-support pass materializes f32 copies of
+    # every bf16 dot operand/result (TPU MXUs consume bf16 natively), and
+    # (b) its buffer assignment follows a throughput-oriented parallel
+    # schedule rather than a memory-minimizing one.
+    meta = cell.meta
+    state_bytes = 0
+    for tree, specs in zip(cell.abstract_args, cell.in_specs):
+        for ab, spec in zip(
+            jax.tree.leaves(tree),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PartitionSpec)),
+        ):
+            shard = 1
+            for entry in (spec or ()):  # PartitionSpec iterates entries
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    shard *= mesh.shape[ax]
+            import numpy as _np
+            state_bytes += int(_np.prod(ab.shape)) * ab.dtype.itemsize // max(shard, 1)
+    analytic_act = meta.get("analytic_bytes", 0) / chips * 0.15  # live window
+    analytic_dev_mb = (state_bytes + analytic_act) / 2**20
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "kind": cell.kind,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "args_mb": _mb(getattr(mem, "argument_size_in_bytes", None)),
+            "out_mb": _mb(getattr(mem, "output_size_in_bytes", None)),
+            "temp_mb": _mb(getattr(mem, "temp_size_in_bytes", None)),
+            "code_mb": _mb(getattr(mem, "generated_code_size_in_bytes", None)),
+            "analytic_state_mb": round(state_bytes / 2**20, 1),
+            "analytic_device_mb": round(analytic_dev_mb, 1),
+        },
+        "collectives": {k: round(v / 2**20, 3) for k, v in coll.by_kind.items()},
+        "collective_count": coll.count,
+        "roofline": rl.row(),
+        "meta": {
+            k: v for k, v in cell.meta.items()
+            if k in ("params_total", "params_active", "tokens", "scan_trips")
+        },
+    }
+    if verbose:
+        dom = rl.dominant
+        print(
+            f"[OK] {arch:28s} {shape:14s} {result['mesh']:10s} "
+            f"compile={compile_s:6.1f}s temp={result['memory']['temp_mb']}MB "
+            f"dom={dom} c/m/x = {rl.compute_s:.2e}/{rl.memory_s:.2e}/"
+            f"{rl.collective_s:.2e}s"
+        )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else list(ARCH_SHAPES[arch])
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    results.append(run_cell(arch, shape, multi))
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    failures.append(
+                        {"arch": arch, "shape": shape, "multi": multi,
+                         "error": f"{type(e).__name__}: {e}"}
+                    )
+                    print(f"[FAIL] {arch} {shape} multi={multi}: {e}")
+                    traceback.print_exc(limit=3)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells OK, {len(failures)} failures -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

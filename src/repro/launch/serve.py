@@ -1,0 +1,73 @@
+"""Retrieval serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve [--corpus version-p001]
+        [--queries 256] [--k 10] [--mode topk|list|count|tfidf]
+
+Builds the full paper index stack over a synthetic corpus (see
+repro.data.collections for the families) and serves batched queries with
+latency percentiles — the single-host analogue of the production retrieval
+tier (the index structures are per-shard state in a real deployment; the
+query engine is identical).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.data.collections import (
+    generate,
+    paperlike_collections,
+    random_substring_patterns,
+)
+from repro.serve.retrieval import RetrievalService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", default="version-p001",
+                    choices=list(paperlike_collections()))
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--mode", default="topk",
+                    choices=["topk", "list", "count", "tfidf"])
+    args = ap.parse_args()
+
+    spec = paperlike_collections()[args.corpus]
+    coll = generate(spec)
+    t0 = time.time()
+    svc = RetrievalService.build(coll, block_size=64, beta=16.0)
+    print(f"corpus {args.corpus}: n={coll.n} d={coll.d}; "
+          f"index built in {time.time()-t0:.1f}s")
+    for k, v in svc.space_report().items():
+        print(f"  {k:22s} {v if isinstance(v, int) else round(v, 3)}")
+
+    workload = random_substring_patterns(coll, 2000, 6, 128)
+    rng = np.random.default_rng(0)
+    lat = []
+    served = 0
+    while served < args.queries:
+        batch = [workload[i] for i in rng.integers(0, len(workload), args.batch)]
+        t0 = time.perf_counter()
+        if args.mode == "count":
+            svc.count(batch)
+        elif args.mode == "list":
+            svc.list_docs(batch, max_df=min(256, coll.d + 1))
+        elif args.mode == "tfidf":
+            svc.tfidf([batch[i : i + 2] for i in range(0, len(batch), 2)],
+                      k=args.k)
+        else:
+            svc.topk(batch, k=args.k)
+        lat.append(time.perf_counter() - t0)
+        served += len(batch)
+    ms = np.asarray(lat) * 1e3
+    print(f"{args.mode}: {served} queries, batch={args.batch}: "
+          f"p50={np.percentile(ms,50):.1f}ms p99={np.percentile(ms,99):.1f}ms "
+          f"({served/ms.sum()*1e3:.0f} q/s)")
+
+
+if __name__ == "__main__":
+    main()

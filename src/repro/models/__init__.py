@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures.
+
+transformer — llama-family dense + MoE decoders (5 LM archs)
+nequip      — E(3)-equivariant interatomic potential (Cartesian-tensor form)
+recsys      — FM, SASRec, AutoInt, DLRM-MLPerf
+"""

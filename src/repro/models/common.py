@@ -1,0 +1,64 @@
+"""Shared model building blocks: norms, RoPE, initializers, MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(d_head: int, theta: float = 500000.0):
+    half = d_head // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 500000.0):
+    """x: [..., S, H, Dh]; positions: int32 broadcastable to [..., S]."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU FFN: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def mlp(x, weights, biases, act=jax.nn.relu, final_act=None):
+    """Plain MLP over a list of (w, b)."""
+    h = x
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = jnp.einsum("...d,df->...f", h, w) + b
+        if i < len(weights) - 1:
+            h = act(h)
+        elif final_act is not None:
+            h = final_act(h)
+    return h
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy.  logits [..., V], labels int [...]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,443 @@
+"""RecSys architectures: FM, SASRec, AutoInt, DLRM-MLPerf.
+
+Shared substrate: one concatenated embedding matrix per model, row-sharded
+over the ``model`` mesh axis (the tables are the dominant state — DLRM's
+MLPerf tables are ~188M rows x 128).  Lookup is ``jnp.take``; multi-hot
+bags reduce with ``jax.ops.segment_sum`` (or the fused Pallas kernel,
+repro.kernels.embedding_bag).  JAX has no EmbeddingBag — this module *is*
+that layer, as the assignment requires.
+
+Steps per arch (wired up in repro.launch.steps):
+  train_step      — logloss (FM/AutoInt/DLRM) or BCE-with-negatives (SASRec)
+  serve_step      — score a batch of requests (serve_p99 / serve_bulk)
+  retrieval_step  — one query vs n_candidates (retrieval_cand): the
+                    candidate-varying field re-embeds; everything else is
+                    computed once and broadcast.  For FM/SASRec this is a
+                    single [n_cand, D] @ [D] matvec — the same "score one
+                    pattern against a million stored documents" shape as
+                    the paper's top-k retrieval, which is why the paper's
+                    index plugs in as a candidate store (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import mlp
+
+# MLPerf DLRM (Criteo 1TB) per-table row counts
+MLPERF_TABLE_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+
+def _criteo_like_sizes(n_fields: int, target_total: int = 10_000_000):
+    """Synthetic per-field vocab sizes with a realistic skew."""
+    base = [3, 10, 60, 250, 1000, 5000, 20_000, 100_000, 500_000, 2_000_000]
+    sizes = [base[i % len(base)] for i in range(n_fields)]
+    scale = target_total / sum(sizes)
+    return tuple(max(3, int(s * scale)) for s in sizes)
+
+
+def _field_offsets(sizes: Sequence[int]):
+    off = [0]
+    for s in sizes:
+        off.append(off[-1] + s)
+    return jnp.asarray(off[:-1], jnp.int32), off[-1]
+
+
+def _embed_init(key, rows, dim, dtype, scale=0.01):
+    """Large tables pad their row count to a multiple of 1024 so row-wise
+    sharding divides evenly on both production meshes (512 chips max);
+    padding rows are never indexed."""
+    if rows >= (1 << 16):
+        rows = -(-rows // 1024) * 1024
+    return (jax.random.normal(key, (rows, dim)) * scale).astype(dtype)
+
+
+# ===========================================================================
+# FM — Rendle ICDM'10.  O(nk) sum-square trick.
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_sizes: tuple = ()
+    param_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if not self.vocab_sizes:
+            object.__setattr__(
+                self, "vocab_sizes", _criteo_like_sizes(self.n_sparse)
+            )
+
+
+def fm_init(cfg: FMConfig, key):
+    k1, k2 = jax.random.split(key)
+    _, total = _field_offsets(cfg.vocab_sizes)
+    return {
+        "emb": _embed_init(k1, total, cfg.embed_dim, cfg.param_dtype),
+        "lin": _embed_init(k2, total, 1, cfg.param_dtype),
+        "bias": jnp.zeros((), cfg.param_dtype),
+    }
+
+
+def fm_logits(cfg: FMConfig, params, sparse_ids):
+    """sparse_ids int32[B, F] (per-field local ids)."""
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    gids = sparse_ids + offsets[None, :]
+    ve = jnp.take(params["emb"], gids, axis=0)            # [B, F, D]
+    le = jnp.take(params["lin"], gids, axis=0)[..., 0]    # [B, F]
+    s = ve.sum(axis=1)                                    # [B, D]
+    pair = 0.5 * ((s * s).sum(-1) - (ve * ve).sum((-1, -2)))
+    return params["bias"] + le.sum(-1) + pair
+
+
+def fm_train_loss(cfg, params, batch):
+    logits = fm_logits(cfg, params, batch["sparse"])
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def fm_retrieval(cfg: FMConfig, params, user_sparse, cand_ids, cand_field: int = 0):
+    """Score one user against candidates filling field ``cand_field``."""
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    F = cfg.n_sparse
+    user_fields = jnp.asarray([f for f in range(F) if f != cand_field], jnp.int32)
+    ug = user_sparse[user_fields] + offsets[user_fields]
+    uv = jnp.take(params["emb"], ug, axis=0)              # [F-1, D]
+    ul = jnp.take(params["lin"], ug, axis=0)[..., 0]
+    s_user = uv.sum(0)
+    const = (
+        params["bias"]
+        + ul.sum()
+        + 0.5 * ((s_user * s_user).sum() - (uv * uv).sum())
+    )
+    cg = cand_ids + offsets[cand_field]
+    cv = jnp.take(params["emb"], cg, axis=0)              # [Ncand, D]
+    cl = jnp.take(params["lin"], cg, axis=0)[..., 0]
+    return const + cl + cv @ s_user
+
+
+# ===========================================================================
+# SASRec — self-attentive sequential recommendation (arXiv:1808.09781)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    param_dtype: jnp.dtype = jnp.float32
+
+
+def sasrec_init(cfg: SASRecConfig, key):
+    keys = jax.random.split(key, 2 + 6 * cfg.n_blocks)
+    D = cfg.embed_dim
+    p = {
+        "item_emb": _embed_init(keys[0], cfg.n_items + 1, D, cfg.param_dtype, 0.02),
+        "pos_emb": _embed_init(keys[1], cfg.seq_len, D, cfg.param_dtype, 0.02),
+        "blocks": [],
+    }
+    for b in range(cfg.n_blocks):
+        bk = jax.random.split(keys[2 + b], 6)
+        p["blocks"].append(
+            {
+                "wq": _embed_init(bk[0], D, D, cfg.param_dtype, D**-0.5),
+                "wk": _embed_init(bk[1], D, D, cfg.param_dtype, D**-0.5),
+                "wv": _embed_init(bk[2], D, D, cfg.param_dtype, D**-0.5),
+                "w1": _embed_init(bk[3], D, D, cfg.param_dtype, D**-0.5),
+                "b1": jnp.zeros((D,), cfg.param_dtype),
+                "w2": _embed_init(bk[4], D, D, cfg.param_dtype, D**-0.5),
+                "b2": jnp.zeros((D,), cfg.param_dtype),
+                "ln1": jnp.ones((D,), cfg.param_dtype),
+                "ln2": jnp.ones((D,), cfg.param_dtype),
+            }
+        )
+    return p
+
+
+def _ln(x, g):
+    m = x.mean(-1, keepdims=True)
+    v = ((x - m) ** 2).mean(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-6) * g
+
+
+def sasrec_encode(cfg: SASRecConfig, params, item_seq):
+    """item_seq int32[B, S] (0 = padding) -> hidden states [B, S, D]."""
+    B, S = item_seq.shape
+    x = jnp.take(params["item_emb"], item_seq, axis=0)
+    x = x + params["pos_emb"][None, :S]
+    mask = (item_seq > 0)[:, None, None, :]               # key mask
+    causal = jnp.tril(jnp.ones((S, S), bool))[None, None]
+    H = cfg.n_heads
+    Dh = cfg.embed_dim // H
+    for blk in params["blocks"]:
+        h = _ln(x, blk["ln1"])
+        q = (h @ blk["wq"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        k = (h @ blk["wk"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        v = (h @ blk["wv"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (Dh**-0.5)
+        logits = jnp.where(causal & mask, logits, -1e30)
+        attn = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", attn, v).transpose(0, 2, 1, 3)
+        x = x + o.reshape(B, S, cfg.embed_dim)
+        h = _ln(x, blk["ln2"])
+        x = x + jax.nn.relu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+    return x
+
+
+def sasrec_train_loss(cfg, params, batch):
+    """BCE over (positive next item, sampled negative) at each position."""
+    seq = batch["item_seq"]                               # [B, S]
+    pos = batch["pos_items"]                              # [B, S]
+    neg = batch["neg_items"]                              # [B, S]
+    h = sasrec_encode(cfg, params, seq)                   # [B, S, D]
+    pe = jnp.take(params["item_emb"], pos, axis=0)
+    ne = jnp.take(params["item_emb"], neg, axis=0)
+    pos_score = (h * pe).sum(-1)
+    neg_score = (h * ne).sum(-1)
+    mask = (pos > 0).astype(jnp.float32)
+    loss = -(
+        jax.nn.log_sigmoid(pos_score) + jax.nn.log_sigmoid(-neg_score)
+    ) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def sasrec_serve(cfg, params, batch):
+    """Score (sequence, target) pairs."""
+    h = sasrec_encode(cfg, params, batch["item_seq"])[:, -1]
+    te = jnp.take(params["item_emb"], batch["target"], axis=0)
+    return (h * te).sum(-1)
+
+
+def sasrec_retrieval(cfg, params, item_seq, cand_ids):
+    """One sequence vs n_candidates: final state . candidate embeddings."""
+    h = sasrec_encode(cfg, params, item_seq)[:, -1][0]    # [D]
+    ce = jnp.take(params["item_emb"], cand_ids, axis=0)   # [N, D]
+    return ce @ h
+
+
+# ===========================================================================
+# AutoInt — attention-based feature interaction (arXiv:1810.11921)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    vocab_sizes: tuple = ()
+    param_dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if not self.vocab_sizes:
+            object.__setattr__(
+                self, "vocab_sizes", _criteo_like_sizes(self.n_sparse)
+            )
+
+
+def autoint_init(cfg: AutoIntConfig, key):
+    keys = jax.random.split(key, 3 + cfg.n_attn_layers)
+    _, total = _field_offsets(cfg.vocab_sizes)
+    din = cfg.embed_dim
+    p = {"emb": _embed_init(keys[0], total, din, cfg.param_dtype), "layers": []}
+    d = din
+    for i in range(cfg.n_attn_layers):
+        lk = jax.random.split(keys[1 + i], 4)
+        p["layers"].append(
+            {
+                "wq": _embed_init(lk[0], d, cfg.d_attn, cfg.param_dtype, d**-0.5),
+                "wk": _embed_init(lk[1], d, cfg.d_attn, cfg.param_dtype, d**-0.5),
+                "wv": _embed_init(lk[2], d, cfg.d_attn, cfg.param_dtype, d**-0.5),
+                "wres": _embed_init(lk[3], d, cfg.d_attn, cfg.param_dtype, d**-0.5),
+            }
+        )
+        d = cfg.d_attn
+    p["out_w"] = _embed_init(keys[-1], cfg.n_sparse * d, 1, cfg.param_dtype)
+    p["out_b"] = jnp.zeros((), cfg.param_dtype)
+    return p
+
+
+def autoint_logits(cfg: AutoIntConfig, params, sparse_ids):
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    gids = sparse_ids + offsets[None, :]
+    x = jnp.take(params["emb"], gids, axis=0)             # [B, F, D]
+    return _autoint_attend(cfg, params, x)
+
+
+def _autoint_attend(cfg: AutoIntConfig, params, x):
+    H = cfg.n_heads
+    for lp in params["layers"]:
+        dh = cfg.d_attn // H
+        q = (x @ lp["wq"]).reshape(*x.shape[:-1], H, dh)
+        k = (x @ lp["wk"]).reshape(*x.shape[:-1], H, dh)
+        v = (x @ lp["wv"]).reshape(*x.shape[:-1], H, dh)
+        logits = jnp.einsum("bfhd,bghd->bhfg", q, k) * (dh**-0.5)
+        attn = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", attn, v).reshape(
+            *x.shape[:-1], cfg.d_attn
+        )
+        x = jax.nn.relu(o + x @ lp["wres"])
+    flat = x.reshape(x.shape[0], -1)
+    return (flat @ params["out_w"])[..., 0] + params["out_b"]
+
+
+def autoint_train_loss(cfg, params, batch):
+    logits = autoint_logits(cfg, params, batch["sparse"])
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def autoint_retrieval(cfg, params, user_sparse, cand_ids, cand_field: int = 0):
+    """Bulk-score candidates by swapping one field's id.
+
+    Same gather restructure as dlrm_retrieval: constant user rows are
+    embedded once; only the candidate field's rows move per candidate."""
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    n = cand_ids.shape[0]
+    gids = user_sparse + offsets
+    ue = jnp.take(params["emb"], gids, axis=0)                # [F, D]
+    ce = jnp.take(params["emb"], cand_ids + offsets[cand_field], axis=0)
+    x = jnp.broadcast_to(ue[None], (n, cfg.n_sparse, cfg.embed_dim))
+    x = jnp.concatenate(
+        [x[:, :cand_field], ce[:, None], x[:, cand_field + 1 :]], axis=1
+    )
+    return _autoint_attend(cfg, params, x)
+
+
+# ===========================================================================
+# DLRM — MLPerf config (arXiv:1906.00091)
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    vocab_sizes: tuple = MLPERF_TABLE_SIZES
+    param_dtype: jnp.dtype = jnp.float32
+
+
+def dlrm_init(cfg: DLRMConfig, key):
+    keys = jax.random.split(key, 3)
+    _, total = _field_offsets(cfg.vocab_sizes)
+    p = {"emb": _embed_init(keys[0], total, cfg.embed_dim, cfg.param_dtype)}
+
+    def mlp_params(k, dims):
+        ws, bs = [], []
+        kk = jax.random.split(k, len(dims) - 1)
+        for i in range(len(dims) - 1):
+            ws.append(_embed_init(kk[i], dims[i], dims[i + 1], cfg.param_dtype,
+                                  dims[i] ** -0.5))
+            bs.append(jnp.zeros((dims[i + 1],), cfg.param_dtype))
+        return ws, bs
+
+    p["bot_w"], p["bot_b"] = mlp_params(keys[1], (cfg.n_dense, *cfg.bot_mlp))
+    n_feat = cfg.n_sparse + 1
+    d_inter = n_feat * (n_feat - 1) // 2 + cfg.bot_mlp[-1]
+    p["top_w"], p["top_b"] = mlp_params(keys[2], (d_inter, *cfg.top_mlp))
+    return p
+
+
+def _dot_interaction(z):
+    """z [B, F, D] -> upper-triangle pairwise dots [B, F(F-1)/2]."""
+    B, F, D = z.shape
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)
+    iu, ju = jnp.triu_indices(F, k=1)
+    return zz[:, iu, ju]
+
+
+def dlrm_logits(cfg: DLRMConfig, params, dense, sparse_ids):
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    bot = mlp(dense, params["bot_w"], params["bot_b"])    # [B, 128]
+    gids = sparse_ids + offsets[None, :]
+    emb = jnp.take(params["emb"], gids, axis=0)           # [B, 26, 128]
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)   # [B, 27, 128]
+    inter = _dot_interaction(z)
+    top_in = jnp.concatenate([bot, inter], axis=-1)
+    return mlp(top_in, params["top_w"], params["top_b"])[..., 0]
+
+
+def dlrm_train_loss(cfg, params, batch):
+    logits = dlrm_logits(cfg, params, batch["dense"], batch["sparse"])
+    labels = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def dlrm_retrieval(cfg, params, dense, user_sparse, cand_ids, cand_field: int = 0,
+                   constrain=None):
+    """Score one user against candidates varying one sparse field.
+
+    The naive path (broadcast the user's ids to [n_cand, 26] and run
+    dlrm_logits) makes GSPMD exchange [n_cand, 26, D] of gathered rows over
+    the row-sharded table even though 25 of the 26 rows are the same for
+    every candidate.  Here the constant rows are gathered once and only the
+    candidate field's [n_cand, D] rows move — a ~26x cut in collective
+    bytes on the production mesh (EXPERIMENTS.md Section Perf, cell 1).
+    """
+    offsets, _ = _field_offsets(cfg.vocab_sizes)
+    n = cand_ids.shape[0]
+    # serving numerics: the interaction runs in the table dtype (the cell
+    # registry serves the big tables in bf16, halving the bytes of the
+    # cross-device row exchange — no f32 consumer near the gather means
+    # the masked-partial-sum all-reduce stays bf16); top MLP in f32.
+    tdt = params["emb"].dtype
+    bot = mlp(dense[None, :], params["bot_w"], params["bot_b"])[0].astype(tdt)
+    user_fields = jnp.asarray(
+        [f for f in range(cfg.n_sparse) if f != cand_field], jnp.int32
+    )
+    ug = user_sparse[user_fields] + offsets[user_fields]
+    ue = jnp.take(params["emb"], ug, axis=0)                           # [25, D]
+    ce = jnp.take(params["emb"], cand_ids + offsets[cand_field], axis=0)
+    if constrain is not None:
+        # pin the gathered rows to candidate sharding (GSPMD may then
+        # reduce-scatter the masked gather instead of all-reducing)
+        ce = constrain(ce)
+
+    # assemble z rows in canonical order: [bot, field_0, ..., field_25]
+    before = ue[:cand_field]
+    after = ue[cand_field:]
+    zc_head = jnp.concatenate([bot[None], before], axis=0)             # const
+    n_head = zc_head.shape[0]
+    z = jnp.concatenate(
+        [
+            jnp.broadcast_to(zc_head[None], (n, n_head, cfg.embed_dim)),
+            ce[:, None, :],
+            jnp.broadcast_to(after[None], (n, after.shape[0], cfg.embed_dim)),
+        ],
+        axis=1,
+    )                                                                   # [n, 27, D]
+    inter = _dot_interaction(z).astype(jnp.float32)
+    top_in = jnp.concatenate(
+        [jnp.broadcast_to(bot[None].astype(jnp.float32), (n, cfg.bot_mlp[-1])),
+         inter], axis=-1,
+    )
+    return mlp(top_in, params["top_w"], params["top_b"])[..., 0]

@@ -1,0 +1,6 @@
+"""Serving layer: batched document-retrieval service (the paper's indexes
+as a first-class serving feature) and LM decode serving."""
+
+from repro.serve.retrieval import RetrievalService
+
+__all__ = ["RetrievalService"]

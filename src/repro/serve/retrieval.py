@@ -1,0 +1,173 @@
+"""Batched document-retrieval serving — the paper's contribution deployed
+as the framework's retrieval layer.
+
+One service object owns the full index stack over a document collection:
+
+    CSA (RLCSA-accounted FM-index)        pattern -> SA range
+    ILCP                                  listing (Sada-I) + counting
+    PDL (+F)                              listing + top-k with frequencies
+    Sadakane (compressed variants)        document counting
+    TF-IDF                                ranked multi-term AND/OR
+
+and exposes *batched, jitted* endpoints.  Queries arrive as padded pattern
+batches (the dense layout accelerators want); every endpoint is a single
+compiled program per (batch-shape, k) signature.
+
+The dispatch policy implements the paper's own recommendation (Section
+6.2.2): compute df cheaply first (Sada-S), compare with occ = hi - lo, and
+route to Brute-L when occ/df is small or the range is tiny, to the
+ILCP/PDL machinery otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.csa import build_csa, csa_search_batch
+from repro.core.ilcp import build_ilcp, ilcp_count_docs_batch, ilcp_list_docs_da
+from repro.core.listing import brute_list_csa, brute_topk
+from repro.core.pdl import build_pdl, pdl_list_docs, pdl_topk
+from repro.core.sada import build_sada, sada_count_batch
+from repro.core.suffix import Collection, build_suffix_data
+from repro.core.tfidf import tfidf_topk_batch
+from repro.data.collections import pad_patterns
+
+
+@dataclasses.dataclass
+class RetrievalService:
+    coll: Collection
+    csa: object
+    ilcp: object
+    pdl_list: object
+    pdl_topk: object
+    sada: object
+    da: object
+    occ_df_threshold: float = 4.0     # paper: brute wins when occ/df < ~4
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls, coll: Collection, block_size: int = 64, beta: float = 16.0,
+        sada_variant: str = "sparse", sample_rate: int = 16,
+    ):
+        data = build_suffix_data(coll)
+        return cls(
+            coll=coll,
+            csa=build_csa(data, sample_rate=sample_rate),
+            ilcp=build_ilcp(data),
+            pdl_list=build_pdl(data, block_size=block_size, beta=beta, mode="list"),
+            pdl_topk=build_pdl(data, block_size=block_size, beta=None, mode="topk"),
+            sada=build_sada(data, sada_variant),
+            da=jnp.asarray(data.da),
+        )
+
+    # -- endpoints ------------------------------------------------------------
+
+    def ranges(self, patterns):
+        pats, lens = pad_patterns(patterns)
+        lo, hi = csa_search_batch(self.csa, jnp.asarray(pats), jnp.asarray(lens))
+        return np.asarray(lo), np.asarray(hi), np.asarray(lens)
+
+    def count(self, patterns):
+        """df per pattern (Sada variant; ILCP counting cross-checks)."""
+        lo, hi, lens = self.ranges(patterns)
+        return np.asarray(sada_count_batch(self.sada, jnp.asarray(lo), jnp.asarray(hi)))
+
+    def count_ilcp(self, patterns):
+        lo, hi, lens = self.ranges(patterns)
+        return np.asarray(
+            ilcp_count_docs_batch(
+                self.ilcp, jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(lens)
+            )
+        )
+
+    def list_docs(self, patterns, max_df: int = 256, engine: str = "auto",
+                  max_buf: int = 4096):
+        """Document listing with the paper's df/occ dispatch policy."""
+        lo, hi, lens = self.ranges(patterns)
+        dfs = np.asarray(sada_count_batch(self.sada, jnp.asarray(lo), jnp.asarray(hi)))
+        out = []
+        for qi in range(len(lo)):
+            l, h = int(lo[qi]), int(hi[qi])
+            if l >= h:
+                out.append([])
+                continue
+            occ = h - l
+            df = max(int(dfs[qi]), 1)
+            eng = engine
+            if engine == "auto":
+                eng = "brute" if occ / df < self.occ_df_threshold else "pdl"
+            if eng == "brute":
+                docs, cnt, _ = brute_list_csa(
+                    self.csa, l, h, max_occ=min(occ, max_buf), max_df=max_df
+                )
+            elif eng == "ilcp":
+                docs, cnt = ilcp_list_docs_da(self.ilcp, self.da, l, h, max_df)
+            else:
+                docs, cnt = pdl_list_docs(
+                    self.pdl_list, self.csa, l, h, max_df, max_buf=max_buf
+                )
+            out.append(sorted(np.asarray(docs)[: int(cnt)].tolist()))
+        return out
+
+    def topk(self, patterns, k: int = 10, max_buf: int = 4096):
+        lo, hi, lens = self.ranges(patterns)
+        out = []
+        for qi in range(len(lo)):
+            l, h = int(lo[qi]), int(hi[qi])
+            if l >= h:
+                out.append([])
+                continue
+            docs, tfs = pdl_topk(self.pdl_topk, self.csa, l, h, k, max_buf=max_buf)
+            out.append(
+                [(int(d), int(t)) for d, t in zip(np.asarray(docs), np.asarray(tfs))
+                 if d >= 0]
+            )
+        return out
+
+    def tfidf(self, queries, k: int = 10, conjunctive: bool = False,
+              max_terms: int = 4, max_buf: int = 2048):
+        """queries: list of term-pattern lists.  Returns ranked (doc, score)."""
+        Q = len(queries)
+        ranges = np.zeros((Q, max_terms, 2), np.int32)
+        valid = np.zeros((Q, max_terms), bool)
+        for qi, terms in enumerate(queries):
+            lo, hi, _ = self.ranges(terms[:max_terms])
+            for ti in range(len(lo)):
+                ranges[qi, ti] = (lo[ti], hi[ti])
+                valid[qi, ti] = True
+        docs, scores = tfidf_topk_batch(
+            self.pdl_topk, self.csa, self.sada, ranges, valid, k, conjunctive,
+            max_buf=max_buf,
+        )
+        out = []
+        for qi in range(Q):
+            out.append(
+                [(int(d), float(s)) for d, s in zip(np.asarray(docs[qi]),
+                                                    np.asarray(scores[qi])) if d >= 0]
+            )
+        return out
+
+    # -- introspection --------------------------------------------------------
+
+    def space_report(self) -> dict:
+        """Bits-per-character accounting in the paper's units."""
+        n = self.coll.n
+        return {
+            "n": n,
+            "d": self.coll.d,
+            "csa_rlcsa_bpc": self.csa.modeled_bits_rlcsa() / n,
+            "ilcp_listing_bpc": self.ilcp.modeled_bits_listing() / n,
+            "ilcp_counting_bpc": self.ilcp.modeled_bits_counting() / n,
+            "pdl_list_bpc": self.pdl_list.modeled_bits() / n,
+            "pdl_topk_bpc": self.pdl_topk.modeled_bits() / n,
+            "sada_bpc": self.sada.modeled_bits() / n,
+            "bwt_runs": self.csa.bwt_runs,
+            "ilcp_runs": self.ilcp.nruns,
+        }

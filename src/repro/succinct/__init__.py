@@ -1,0 +1,41 @@
+"""Succinct data-structure substrate: rank/select bitvectors, wavelet
+matrices, and range-minimum queries.
+
+These are the primitives the paper's structures (ILCP, PDL, Sadakane
+counting) are built from.  All query paths are jit/vmap-compatible; all
+structures are immutable pytrees (see ``repro.common.pytree_dataclass``).
+"""
+
+from repro.succinct.bitvector import (
+    PlainBitvector,
+    RLEBitvector,
+    SparseBitvector,
+    plain_from_bits,
+    rle_from_bits,
+    sparse_from_positions,
+)
+from repro.succinct.rmq import SparseTableRMQ, rmq_build, rmq_query
+from repro.succinct.wavelet import (
+    WaveletMatrix,
+    wm_access,
+    wm_build,
+    wm_count_less,
+    wm_rank,
+)
+
+__all__ = [
+    "PlainBitvector",
+    "SparseBitvector",
+    "RLEBitvector",
+    "plain_from_bits",
+    "sparse_from_positions",
+    "rle_from_bits",
+    "WaveletMatrix",
+    "wm_build",
+    "wm_rank",
+    "wm_access",
+    "wm_count_less",
+    "SparseTableRMQ",
+    "rmq_build",
+    "rmq_query",
+]

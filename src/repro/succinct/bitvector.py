@@ -1,0 +1,321 @@
+"""Rank/select bitvectors.
+
+Three representations, mirroring the paper's toolbox (Section 2.2 and the
+encodings of Section 6.4.1):
+
+* ``PlainBitvector``   — word array + block popcount prefix.  O(1) rank via
+  gather+popcount (the Pallas kernel ``repro.kernels.rank`` implements the
+  same layout for the TPU hot path), select via searchsorted + in-word scan.
+  This plays the role of (Clark 1996) plain bitvectors.
+
+* ``SparseBitvector``  — positions of the 1s (Elias-Fano layout conceptually;
+  the working set stores the positions as int32, the *modeled* size is the
+  Okanohara-Sadakane bound m lg(n/m) + 2m bits).  rank = binary search,
+  select = gather.  Plays the role of "sparse bitmaps" (sd_vector).
+
+* ``RLEBitvector``     — alternating runs.  rank/select via run prefix sums.
+  Plays the role of the RLCSA's run-length encoded bitvectors (Sada-RR /
+  Sada-RS / Sada-RD in Section 6.4.1); the modeled size uses delta codes.
+
+Conventions (0-based, half-open):
+  rank1(bv, i)   = number of 1s in positions [0, i),   0 <= i <= n
+  select1(bv, j) = position of the j-th 1 (j in [0, m))
+
+TPU adaptation note: on a scalar CPU these structures answer one query at a
+time by pointer chasing; here every query is a pure gather/arith expression,
+so a *batch* of queries is a dense vectorized computation (vmap).  This is
+the execution-model change recorded in DESIGN.md Section 2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import (
+    IDX,
+    WORD_BITS,
+    as_i32,
+    ceil_div,
+    delta_code_len,
+    elias_fano_bits,
+    popcount,
+    pytree_dataclass,
+)
+
+# ---------------------------------------------------------------------------
+# Plain bitvector
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass(meta=("n", "m"))
+class PlainBitvector:
+    """Word-aligned bitvector with popcount prefix blocks.
+
+    words:        uint32[W+1]  (one zero pad word so rank(n) never reads OOB)
+    ones_prefix:  int32[W+1]   ones in words [0, w)
+    zeros_prefix: int32[W+1]   zeros in positions [0, 32*w) clamped to n
+    n:            static length in bits
+    m:            static number of ones
+    """
+
+    words: jnp.ndarray
+    ones_prefix: jnp.ndarray
+    zeros_prefix: jnp.ndarray
+    n: int
+    m: int
+
+    # -- queries ------------------------------------------------------------
+
+    def rank1(self, i):
+        """Number of 1s in [0, i).  i may be a traced scalar or array."""
+        i = as_i32(i)
+        w = i >> 5
+        off = i & 31
+        word = self.words[w]
+        mask = (jnp.uint32(1) << off.astype(jnp.uint32)) - jnp.uint32(1)
+        return self.ones_prefix[w] + popcount(word & mask).astype(IDX)
+
+    def rank0(self, i):
+        i = as_i32(i)
+        return i - self.rank1(i)
+
+    def get(self, i):
+        i = as_i32(i)
+        return ((self.words[i >> 5] >> (i & 31).astype(jnp.uint32)) & 1).astype(IDX)
+
+    def select1(self, j):
+        """Position of the j-th 1 (j in [0, m)).  Out-of-range j returns n."""
+        j = as_i32(j)
+        # word with ones_prefix[w] <= j < ones_prefix[w+1]
+        w = jnp.searchsorted(self.ones_prefix, j, side="right") - 1
+        w = jnp.clip(w, 0, self.words.shape[0] - 1).astype(IDX)
+        local = j - self.ones_prefix[w]
+        word = self.words[w]
+        bits = (word >> jnp.arange(WORD_BITS, dtype=jnp.uint32)) & jnp.uint32(1)
+        cum = jnp.cumsum(bits.astype(IDX))
+        pos_in_word = jnp.argmax(cum == local + 1).astype(IDX)
+        ok = (j >= 0) & (j < self.m)
+        return jnp.where(ok, w * WORD_BITS + pos_in_word, as_i32(self.n))
+
+    def select0(self, j):
+        """Position of the j-th 0 (j in [0, n - m)).  OOR returns n."""
+        j = as_i32(j)
+        w = jnp.searchsorted(self.zeros_prefix, j, side="right") - 1
+        w = jnp.clip(w, 0, self.words.shape[0] - 1).astype(IDX)
+        local = j - self.zeros_prefix[w]
+        word = self.words[w]
+        idx = jnp.arange(WORD_BITS, dtype=IDX)
+        bits = ((word >> idx.astype(jnp.uint32)) & jnp.uint32(1)).astype(IDX)
+        # positions >= n are padding: they are *not* zeros of the bitvector
+        valid = (w * WORD_BITS + idx) < self.n
+        zbits = jnp.where(valid, 1 - bits, 0)
+        cum = jnp.cumsum(zbits)
+        pos_in_word = jnp.argmax(cum == local + 1).astype(IDX)
+        ok = (j >= 0) & (j < self.n - self.m)
+        return jnp.where(ok, w * WORD_BITS + pos_in_word, as_i32(self.n))
+
+    # -- space accounting ---------------------------------------------------
+
+    def modeled_bits(self) -> int:
+        """Paper-model size: n + o(n) (plain bitvector with rank support)."""
+        return self.n + ceil_div(self.n, WORD_BITS * 8) * WORD_BITS + 2 * WORD_BITS
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    """Pack a 0/1 numpy array into uint32 words (little-endian within word)."""
+    bits = np.asarray(bits, dtype=np.uint8)
+    n = len(bits)
+    W = ceil_div(max(n, 1), WORD_BITS)
+    padded = np.zeros(W * WORD_BITS, dtype=np.uint8)
+    padded[:n] = bits
+    lanes = padded.reshape(W, WORD_BITS).astype(np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (lanes << shifts).sum(axis=1, dtype=np.uint32)
+
+
+def plain_from_bits(bits) -> PlainBitvector:
+    """Build from a 0/1 array (host-side; builds are offline, queries are jit)."""
+    bits = np.asarray(bits)
+    if bits.dtype == np.bool_:
+        bits = bits.astype(np.uint8)
+    n = int(bits.shape[0])
+    words = pack_bits_np(bits)
+    pc = np.zeros(len(words) + 1, dtype=np.int32)
+    # popcount on host
+    pc[1:] = np.cumsum([int(bin(int(w)).count("1")) for w in words], dtype=np.int64)
+    m = int(pc[-1])
+    ones_prefix = pc
+    word_start_pos = np.minimum(np.arange(len(words) + 1, dtype=np.int64) * WORD_BITS, n)
+    zeros_prefix = (word_start_pos - pc).astype(np.int32)
+    words_padded = np.concatenate([words, np.zeros(1, dtype=np.uint32)])
+    # prefix arrays must be indexable at w = W (rank at i == n)
+    ones_prefix = np.concatenate([ones_prefix, ones_prefix[-1:]]).astype(np.int32)
+    zeros_prefix = np.concatenate([zeros_prefix, zeros_prefix[-1:]]).astype(np.int32)
+    return PlainBitvector(
+        words=jnp.asarray(words_padded),
+        ones_prefix=jnp.asarray(ones_prefix[: len(words_padded)]),
+        zeros_prefix=jnp.asarray(zeros_prefix[: len(words_padded)]),
+        n=n,
+        m=m,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sparse bitvector (Elias-Fano model)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass(meta=("n", "m"))
+class SparseBitvector:
+    """Positions of ones; rank by binary search, select by gather.
+
+    pos: int32[m]  sorted positions of the 1s  (padded with n if m == 0)
+    """
+
+    pos: jnp.ndarray
+    n: int
+    m: int
+
+    def rank1(self, i):
+        i = as_i32(i)
+        return jnp.searchsorted(self.pos, i, side="left").astype(IDX)
+
+    def rank0(self, i):
+        i = as_i32(i)
+        return i - self.rank1(i)
+
+    def get(self, i):
+        i = as_i32(i)
+        k = jnp.searchsorted(self.pos, i, side="left")
+        k = jnp.clip(k, 0, max(self.m - 1, 0))
+        hit = (self.m > 0) & (self.pos[k] == i)
+        return hit.astype(IDX)
+
+    def select1(self, j):
+        j = as_i32(j)
+        ok = (j >= 0) & (j < self.m)
+        jc = jnp.clip(j, 0, max(self.m - 1, 0))
+        return jnp.where(ok, self.pos[jc], as_i32(self.n))
+
+    def select0(self, j):
+        """j-th zero: j + (number of ones k with pos[k] - k <= j)."""
+        j = as_i32(j)
+        shifted = self.pos - jnp.arange(self.m, dtype=IDX)
+        t = jnp.searchsorted(shifted, j, side="right").astype(IDX)
+        ok = (j >= 0) & (j < self.n - self.m)
+        return jnp.where(ok, j + t, as_i32(self.n))
+
+    def modeled_bits(self) -> int:
+        return elias_fano_bits(self.m, self.n)
+
+
+def sparse_from_positions(pos, n: int) -> SparseBitvector:
+    pos = np.asarray(pos, dtype=np.int32)
+    if pos.size > 1:
+        assert (np.diff(pos) > 0).all(), "positions must be strictly increasing"
+    if pos.size:
+        assert 0 <= pos[0] and pos[-1] < n
+    store = pos if pos.size else np.asarray([n], dtype=np.int32)
+    return SparseBitvector(pos=jnp.asarray(store), n=int(n), m=int(pos.size))
+
+
+def sparse_from_bits(bits) -> SparseBitvector:
+    bits = np.asarray(bits)
+    return sparse_from_positions(np.flatnonzero(bits), int(bits.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# Run-length encoded bitvector
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass(meta=("n", "m", "first_bit", "nruns"))
+class RLEBitvector:
+    """Alternating runs; run r covers [run_starts[r], run_starts[r+1]).
+
+    run_starts:  int32[R+1]  (last entry == n)
+    ones_prefix: int32[R+1]  ones in runs [0, r)
+    Value of run r is first_bit ^ (r & 1).
+    """
+
+    run_starts: jnp.ndarray
+    ones_prefix: jnp.ndarray
+    n: int
+    m: int
+    first_bit: int
+    nruns: int
+
+    def _run_of(self, i):
+        r = jnp.searchsorted(self.run_starts, i, side="right") - 1
+        return jnp.clip(r, 0, self.nruns - 1).astype(IDX)
+
+    def rank1(self, i):
+        i = as_i32(i)
+        r = self._run_of(jnp.maximum(i - 1, 0))
+        r = jnp.where(i <= 0, 0, r)
+        # run value = first_bit ^ (r & 1)
+        run_val = jnp.bitwise_xor(as_i32(self.first_bit), r & 1)
+        within = jnp.where(run_val == 1, i - self.run_starts[r], 0)
+        out = self.ones_prefix[r] + within
+        return jnp.where(i <= 0, 0, out).astype(IDX)
+
+    def rank0(self, i):
+        i = as_i32(i)
+        return i - self.rank1(i)
+
+    def get(self, i):
+        i = as_i32(i)
+        r = self._run_of(i)
+        return jnp.bitwise_xor(as_i32(self.first_bit), r & 1)
+
+    def select1(self, j):
+        j = as_i32(j)
+        r = jnp.searchsorted(self.ones_prefix, j, side="right") - 1
+        r = jnp.clip(r, 0, self.nruns - 1).astype(IDX)
+        pos = self.run_starts[r] + (j - self.ones_prefix[r])
+        ok = (j >= 0) & (j < self.m)
+        return jnp.where(ok, pos, as_i32(self.n))
+
+    def select0(self, j):
+        j = as_i32(j)
+        zeros_prefix = self.run_starts[:-1] - self.ones_prefix[:-1]
+        r = jnp.searchsorted(zeros_prefix, j, side="right") - 1
+        r = jnp.clip(r, 0, self.nruns - 1).astype(IDX)
+        pos = self.run_starts[r] + (j - zeros_prefix[r])
+        ok = (j >= 0) & (j < self.n - self.m)
+        return jnp.where(ok, pos, as_i32(self.n))
+
+    def modeled_bits(self) -> int:
+        """Delta-coded run lengths (the Sada-RR encoding of Section 6.4.1)."""
+        starts = np.asarray(self.run_starts)
+        lens = np.diff(starts)
+        return int(sum(delta_code_len(int(v)) for v in lens if v > 0)) + 2 * 32
+
+
+def rle_from_bits(bits) -> RLEBitvector:
+    bits = np.asarray(bits).astype(np.int8)
+    n = int(bits.shape[0])
+    if n == 0:
+        return RLEBitvector(
+            run_starts=jnp.asarray([0], dtype=IDX),
+            ones_prefix=jnp.asarray([0], dtype=IDX),
+            n=0, m=0, first_bit=0, nruns=1,
+        )
+    change = np.flatnonzero(np.diff(bits)) + 1
+    run_starts = np.concatenate([[0], change, [n]]).astype(np.int64)
+    first_bit = int(bits[0])
+    nruns = len(run_starts) - 1
+    lens = np.diff(run_starts)
+    run_vals = np.bitwise_xor(np.arange(nruns) % 2, first_bit)
+    ones_per_run = lens * run_vals
+    ones_prefix = np.concatenate([[0], np.cumsum(ones_per_run)]).astype(np.int32)
+    return RLEBitvector(
+        run_starts=jnp.asarray(run_starts.astype(np.int32)),
+        ones_prefix=jnp.asarray(ones_prefix),
+        n=n,
+        m=int(ones_prefix[-1]),
+        first_bit=first_bit,
+        nruns=nruns,
+    )

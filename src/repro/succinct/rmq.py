@@ -1,0 +1,97 @@
+"""Range-minimum queries (leftmost-minimum semantics).
+
+The paper relies on RMQ twice:
+  * Muthukrishnan/Sadakane document listing recursion over C (Sada-C) and
+    over the run heads VILCP (Sada-I, Section 3.3) — correctness of the
+    V-marking optimization *requires* the leftmost minimum (Lemma 3).
+
+We use a sparse table (power-of-two windows).  On a scalar CPU the paper
+chooses the 2n-bit Fischer-Heun structure; on TPU a query must be a small
+fixed number of gathers, and the sparse table gives exactly two gathers and
+one compare per query with perfect vmap batching.  The space trade
+(n lg n words vs 2n bits) is reported in benchmarks via ``modeled_bits``
+both ways, so the paper's space accounting stays visible (DESIGN.md Sec 6).
+
+The table stores *argmin positions*; ties resolve to the leftmost, which the
+listing proof (Lemma 3) depends on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32, floor_log2, pytree_dataclass
+
+
+@pytree_dataclass(meta=("n", "levels"))
+class SparseTableRMQ:
+    """table[k, i] = argmin of values[i : i + 2^k] (leftmost).
+
+    values: int32[n]        (kept for comparisons at query time)
+    table:  int32[L, n]
+    """
+
+    values: jnp.ndarray
+    table: jnp.ndarray
+    n: int
+    levels: int
+
+
+def rmq_build(values) -> SparseTableRMQ:
+    values = np.asarray(values, dtype=np.int32)
+    n = int(values.shape[0])
+    if n == 0:
+        return SparseTableRMQ(
+            values=jnp.zeros((1,), IDX), table=jnp.zeros((1, 1), IDX), n=0, levels=1
+        )
+    levels = floor_log2(n) + 1
+    table = np.zeros((levels, n), dtype=np.int32)
+    table[0] = np.arange(n, dtype=np.int32)
+    for k in range(1, levels):
+        half = 1 << (k - 1)
+        left = table[k - 1]
+        right_idx = np.minimum(np.arange(n) + half, n - 1)
+        right = table[k - 1][right_idx]
+        # leftmost tie-break: strict less required to move to the right arg
+        take_right = values[right] < values[left]
+        table[k] = np.where(take_right, right, left)
+    return SparseTableRMQ(
+        values=jnp.asarray(values), table=jnp.asarray(table), n=n, levels=levels
+    )
+
+
+def _floor_log2_jnp(x):
+    """floor(lg x) for x >= 1 as a traced value (31 - clz)."""
+    x = as_i32(x)
+    return 31 - jax.lax.clz(x)
+
+
+def rmq_query(rmq: SparseTableRMQ, lo, hi):
+    """Leftmost argmin of values[lo..hi] inclusive.  Traced lo/hi ok.
+
+    Returns lo for empty/invalid ranges (callers guard on lo <= hi).
+    """
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    span = jnp.maximum(hi - lo + 1, 1)
+    k = _floor_log2_jnp(span)
+    k = jnp.clip(k, 0, rmq.levels - 1)
+    a = rmq.table[k, lo]
+    b = rmq.table[k, jnp.maximum(hi - (as_i32(1) << k) + 1, lo)]
+    va = rmq.values[a]
+    vb = rmq.values[b]
+    # leftmost: prefer a unless b is strictly smaller OR (equal and earlier)
+    pick_b = (vb < va) | ((vb == va) & (b < a))
+    return jnp.where(pick_b, b, a).astype(IDX)
+
+
+def rmq_modeled_bits_succinct(n: int) -> int:
+    """The paper's choice: Fischer-Heun 2n + o(n) bits."""
+    return 2 * n + max(1, n // 4)
+
+
+def rmq_modeled_bits_table(rmq: SparseTableRMQ) -> int:
+    """What our working layout actually stores."""
+    return int(rmq.table.size) * 32 + int(rmq.values.size) * 32

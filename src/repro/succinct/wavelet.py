@@ -1,0 +1,164 @@
+"""Wavelet matrix over small-alphabet sequences.
+
+The paper uses wavelet trees in three places:
+  * the balanced wavelet tree over the document array DA (the WT document
+    lister of Valimaki & Makinen 2007 / Navarro et al 2014 baseline),
+  * rank_c over the BWT inside the CSA backward search,
+  * the *skewed* wavelet tree over VILCP for ILCP document counting (Sec 3.4).
+
+We implement the pointerless *wavelet matrix* (Claude, Navarro & Ordonez
+2015), which is rank/select-equivalent to the wavelet tree, has identical
+space, and maps better onto batched TPU dataflow: each level is one global
+bitvector (one gather per level, no per-node offsets).  The skewed-tree
+*query* of Section 3.4 is realised by the equivalent value-loop over
+wavelet-matrix ranks plus the L' run-length bitmap (see repro.core.ilcp);
+the skewed shape's O(m)-node guarantee becomes an O(m lg lambda) batched
+guarantee here — recorded in DESIGN.md Section 6.
+
+Conventions: sequence values in [0, sigma); all ranks half-open as in
+repro.succinct.bitvector.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import IDX, as_i32, ceil_log2, pytree_dataclass
+from repro.succinct.bitvector import PlainBitvector, plain_from_bits
+
+
+@pytree_dataclass(meta=("n", "sigma", "levels"))
+class WaveletMatrix:
+    """levels stacked bitvectors; level 0 tests the MSB.
+
+    words:        uint32[L, W+1]
+    ones_prefix:  int32[L, W+1]
+    zcount:       int32[L]      number of zeros at each level
+    """
+
+    words: jnp.ndarray
+    ones_prefix: jnp.ndarray
+    zcount: jnp.ndarray
+    n: int
+    sigma: int
+    levels: int
+
+    def _rank1_level(self, lvl, i):
+        i = as_i32(i)
+        w = i >> 5
+        off = (i & 31).astype(jnp.uint32)
+        word = self.words[lvl, w]
+        mask = (jnp.uint32(1) << off) - jnp.uint32(1)
+        return self.ones_prefix[lvl, w] + jax.lax.population_count(word & mask).astype(IDX)
+
+    def _rank0_level(self, lvl, i):
+        return as_i32(i) - self._rank1_level(lvl, i)
+
+
+def wm_build(seq, sigma: int | None = None) -> WaveletMatrix:
+    """Host-side build (offline, like every index build in the paper)."""
+    seq = np.asarray(seq, dtype=np.int64)
+    n = int(seq.shape[0])
+    if sigma is None:
+        sigma = int(seq.max()) + 1 if n else 1
+    levels = max(1, ceil_log2(max(sigma, 2)))
+    cur = seq.copy()
+    words_l, prefix_l, zc = [], [], []
+    for lvl in range(levels):
+        shift = levels - 1 - lvl
+        bits = (cur >> shift) & 1
+        bv = plain_from_bits(bits)
+        words_l.append(np.asarray(bv.words))
+        prefix_l.append(np.asarray(bv.ones_prefix))
+        zc.append(int(n - bits.sum()))
+        # stable partition: zeros first
+        cur = np.concatenate([cur[bits == 0], cur[bits == 1]])
+    return WaveletMatrix(
+        words=jnp.asarray(np.stack(words_l)),
+        ones_prefix=jnp.asarray(np.stack(prefix_l)),
+        zcount=jnp.asarray(np.asarray(zc, dtype=np.int32)),
+        n=n,
+        sigma=int(sigma),
+        levels=levels,
+    )
+
+
+def wm_rank(wm: WaveletMatrix, c, i):
+    """rank_c(S, i): occurrences of symbol c in S[0, i).  Traced c, i ok."""
+    c = as_i32(c)
+
+    def body(lvl, carry):
+        lo, hi = carry  # block start and mapped prefix end
+        bit = (c >> (wm.levels - 1 - lvl)) & 1
+        z = wm.zcount[lvl]
+        lo0, hi0 = wm._rank0_level(lvl, lo), wm._rank0_level(lvl, hi)
+        lo1, hi1 = z + (lo - lo0), z + (hi - hi0)
+        lo = jnp.where(bit == 0, lo0, lo1)
+        hi = jnp.where(bit == 0, hi0, hi1)
+        return (lo, hi)
+
+    lo, hi = jax.lax.fori_loop(0, wm.levels, body, (as_i32(0), as_i32(i)))
+    return (hi - lo).astype(IDX)
+
+
+def wm_access(wm: WaveletMatrix, i):
+    """S[i]."""
+
+    def body(lvl, carry):
+        pos, val = carry
+        w = pos >> 5
+        bit = ((wm.words[lvl, w] >> (pos & 31).astype(jnp.uint32)) & 1).astype(IDX)
+        z = wm.zcount[lvl]
+        r1 = wm._rank1_level(lvl, pos)
+        pos0 = pos - r1           # rank0(pos)
+        pos = jnp.where(bit == 0, pos0, z + r1)
+        val = (val << 1) | bit
+        return (pos, val)
+
+    _, val = jax.lax.fori_loop(0, wm.levels, body, (as_i32(i), as_i32(0)))
+    return val
+
+
+def wm_count_less(wm: WaveletMatrix, lo, hi, m):
+    """Number of positions p in [lo, hi) with S[p] < m.  Traced args ok."""
+    m = as_i32(m)
+
+    def body(lvl, carry):
+        lo, hi, acc = carry
+        bit = (m >> (wm.levels - 1 - lvl)) & 1
+        z = wm.zcount[lvl]
+        lo0, hi0 = wm._rank0_level(lvl, lo), wm._rank0_level(lvl, hi)
+        lo1, hi1 = z + (lo - lo0), z + (hi - hi0)
+        # if the m-bit is 1, every value with 0 at this level (same prefix)
+        # is < m: add the size of the left block, descend right.
+        acc = acc + jnp.where(bit == 1, hi0 - lo0, 0)
+        lo = jnp.where(bit == 0, lo0, lo1)
+        hi = jnp.where(bit == 0, hi0, hi1)
+        return (lo, hi, acc)
+
+    big = m >= wm.sigma
+    lo_, hi_, acc = jax.lax.fori_loop(
+        0, wm.levels, body, (as_i32(lo), as_i32(hi), as_i32(0))
+    )
+    return jnp.where(big, as_i32(hi) - as_i32(lo), acc)
+
+
+def wm_symbol_range(wm: WaveletMatrix, c, lo, hi):
+    """Occurrence-rank interval of symbol c within S[lo, hi).
+
+    Returns (a, b): the occurrences of c inside [lo, hi) are the a-th .. b-1-th
+    occurrences of c in the whole sequence.  This is the wavelet-tree "arrive
+    at leaf c with an interval" operation used by the skewed-tree counting of
+    Section 3.4; combined with the L' bitmap it weights run heads by lengths.
+    """
+    a = wm_rank(wm, c, lo)
+    b = wm_rank(wm, c, hi)
+    return a, b
+
+
+def wm_modeled_bits(wm: WaveletMatrix) -> int:
+    """n*ceil(lg sigma) + o(...) — plain-bitvector levels (Grossi et al 2003)."""
+    per_level = wm.n + max(1, wm.n // 8)
+    return wm.levels * per_level + 64 * wm.levels

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, checkpointing, fault tolerance, gradient
+compression, and the training loop driver."""

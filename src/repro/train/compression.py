@@ -1,0 +1,73 @@
+"""Gradient compression: block-wise int8 quantization with error feedback.
+
+At 1000+ nodes the cross-pod (DCI) all-reduce is the scarce resource; int8
+with error feedback cuts gradient bytes 4x vs f32 (2x vs bf16) while the
+residual buffer keeps the *accumulated* quantization error in the update
+path, preserving convergence (Seide et al. 2014 / EF-SGD, Karimireddy et
+al. 2019).
+
+Usage in the hierarchical reduction: reduce-scatter the raw local grads
+inside the pod over ICI (cheap), quantize only the cross-pod segment,
+all-reduce int8 over DCI, dequantize, all-gather inside the pod.  This
+module implements the quantize/dequantize + error-feedback state; the
+convergence-parity test trains a small model both ways.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _blockwise_scale(g2d):
+    return jnp.max(jnp.abs(g2d), axis=-1, keepdims=True) / 127.0 + 1e-12
+
+
+def compress_leaf(g, err):
+    """Returns (int8 payload, scales, new error feedback)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    err = err.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    x = jnp.pad(flat + err, (0, pad)).reshape(-1, BLOCK)
+    scale = _blockwise_scale(x)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = (x - deq).reshape(-1)[:n].reshape(g.shape)
+    return q, scale, new_err
+
+
+def decompress_leaf(q, scale, shape):
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return deq[:n].reshape(shape)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grads(grads, err_state):
+    """Quantize+dequantize every leaf with error feedback.  Returns
+    (effective grads as seen post-communication, new error state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_leaf(g, e)
+        outs.append(decompress_leaf(q, s, g.shape).astype(g.dtype))
+        errs.append(ne)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, errs)
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(f32)."""
+    total_f32 = sum(l.size * 4 for l in jax.tree.leaves(grads))
+    total_c = sum(
+        l.size + (l.size + BLOCK - 1) // BLOCK * 4 for l in jax.tree.leaves(grads)
+    )
+    return total_c / total_f32

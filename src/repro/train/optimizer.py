@@ -1,0 +1,79 @@
+"""AdamW with ZeRO-friendly state layout.
+
+Moments live in a configurable dtype (f32 default; bf16 for the 400B MoE
+where f32 moments would not fit the per-device HBM budget even fully
+sharded — recorded in DESIGN.md).  State sharding is decided by
+repro.dist.sharding.zero_specs: moments take the parameter's sharding plus
+the data axes on the largest still-unsharded divisible dimension (ZeRO-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: jnp.dtype = jnp.float32
+    grad_clip: float | None = 1.0
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_opt_state(params, cfg: AdamWConfig = AdamWConfig()):
+    return jax.eval_shape(lambda: adamw_init(params, cfg))
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    if cfg.grad_clip is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * cfg.b1 + gf * (1 - cfg.b1)
+        vf = v.astype(jnp.float32) * cfg.b2 + gf * gf * (1 - cfg.b2)
+        mhat = mf / c1
+        vhat = vf / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,272 @@
+"""Tests for the ILCP index (Section 3): run-length structure, document
+listing (Fig 1), counting (Fig 3), against brute-force oracles; plus the
+Brute/Sada-C baselines; plus the Lemma 2 run-growth property."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.csa import build_csa
+from repro.core.ilcp import (
+    SkewedWaveletTree,
+    build_ilcp,
+    ilcp_count_docs,
+    ilcp_count_docs_batch,
+    ilcp_list_docs_csa,
+    ilcp_list_docs_da,
+    ilcp_num_runs,
+)
+from repro.core.listing import (
+    brute_list_csa,
+    brute_list_da,
+    brute_topk,
+    sada_c_list_docs_da,
+    sada_c_list_docs_csa,
+)
+from repro.succinct.rmq import rmq_build
+
+RNG = np.random.default_rng(11)
+
+
+def make_fixture(docs):
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    index = build_ilcp(data)
+    csa = build_csa(data, sample_rate=4)
+    da = jnp.asarray(data.da)
+    return coll, data, index, csa, da
+
+
+def oracle_docs(data, lo, hi):
+    return sorted(set(data.da[lo:hi].tolist()))
+
+
+def all_test_patterns(docs, max_len=4):
+    pats = set()
+    for doc in docs:
+        s = doc if isinstance(doc, str) else "".join(chr(97 + x) for x in doc)
+        for m in range(1, max_len + 1):
+            for i in range(0, max(1, len(s) - m + 1), 2):
+                pats.add(s[i : i + m])
+    return sorted(p for p in pats if p)
+
+
+DOC_SETS = {
+    "paper": ["TATA", "LATA", "AAAA"],
+    "versions": None,  # filled below
+    "random": None,
+}
+
+
+def _make_versions():
+    base = "".join(RNG.choice(list("acgt"), 60))
+    docs = []
+    for _ in range(8):
+        b = list(base)
+        for _ in range(3):
+            b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+        docs.append("".join(b))
+    return docs
+
+
+DOC_SETS["versions"] = _make_versions()
+DOC_SETS["random"] = ["".join(RNG.choice(list("ab"), RNG.integers(3, 25))) for _ in range(6)]
+
+
+@pytest.fixture(scope="module", params=list(DOC_SETS))
+def fixture(request):
+    docs = DOC_SETS[request.param]
+    return docs, *make_fixture(docs)
+
+
+def test_ilcp_listing_da_matches_oracle(fixture):
+    docs, coll, data, index, csa, da = fixture
+    max_df = coll.d + 1
+    for p in all_test_patterns(docs):
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        got_docs, cnt = ilcp_list_docs_da(index, da, lo, hi, max_df)
+        got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+        assert got == oracle_docs(data, lo, hi), (p, lo, hi)
+
+
+def test_ilcp_listing_csa_matches_oracle(fixture):
+    docs, coll, data, index, csa, da = fixture
+    max_df = coll.d + 1
+    for p in all_test_patterns(docs)[::3]:  # subsample: locate is slower
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        got_docs, cnt = ilcp_list_docs_csa(index, csa, lo, hi, max_df)
+        got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+        assert got == oracle_docs(data, lo, hi), (p, lo, hi)
+
+
+def test_ilcp_counting_matches_oracle(fixture):
+    docs, coll, data, index, csa, da = fixture
+    los, his, ms, exp = [], [], [], []
+    for p in all_test_patterns(docs):
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        los.append(lo)
+        his.append(hi)
+        ms.append(len(enc))
+        exp.append(len(oracle_docs(data, lo, hi)))
+    got = ilcp_count_docs_batch(
+        index, jnp.asarray(los), jnp.asarray(his), jnp.asarray(ms)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_ilcp_counting_matches_skewed_wavelet_tree(fixture):
+    """The jitted rank-descent counting must agree with the literal
+    skewed-wavelet-tree traversal of Section 3.4 on run-head counts."""
+    docs, coll, data, index, csa, da = fixture
+    vilcp = np.asarray(index.vilcp)
+    swt = SkewedWaveletTree(vilcp, int(vilcp.max()))
+    # compare count-of-run-heads for value < m over whole VILCP
+    from repro.succinct.wavelet import wm_count_less
+
+    for m in [1, 2, 3, 5]:
+        got = int(wm_count_less(index.wm, 0, len(vilcp), m))
+        exp = swt.count_less(0, len(vilcp), m)
+        assert got == exp, m
+
+
+def test_brute_da_and_csa_match_oracle(fixture):
+    docs, coll, data, index, csa, da = fixture
+    max_occ = coll.n
+    for p in all_test_patterns(docs)[::2]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        docs_d, cnt_d, freq_d = brute_list_da(da, lo, hi, max_occ)
+        exp = oracle_docs(data, lo, hi)
+        assert sorted(np.asarray(docs_d)[: int(cnt_d)].tolist()) == exp
+        # frequencies
+        from collections import Counter
+
+        c = Counter(data.da[lo:hi].tolist())
+        got_pairs = {
+            int(doc): int(f)
+            for doc, f in zip(np.asarray(docs_d)[: int(cnt_d)], np.asarray(freq_d))
+        }
+        assert got_pairs == dict(c)
+
+        docs_l, cnt_l, freq_l = brute_list_csa(csa, lo, hi, max_occ)
+        assert sorted(np.asarray(docs_l)[: int(cnt_l)].tolist()) == exp
+
+
+def test_sada_c_matches_oracle(fixture):
+    docs, coll, data, index, csa, da = fixture
+    rmq_c = rmq_build(data.c)
+    max_df = coll.d + 1
+    for p in all_test_patterns(docs)[::2]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        got_docs, cnt = sada_c_list_docs_da(rmq_c, da, lo, hi, coll.d, max_df)
+        got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+        assert got == oracle_docs(data, lo, hi), p
+
+
+def test_brute_topk():
+    docs, coll, data, index, csa, da = (
+        DOC_SETS["versions"],
+        *make_fixture(DOC_SETS["versions"]),
+    )
+    for p in ["a", "ac", "g"]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        d_, c_, f_ = brute_list_da(da, lo, hi, coll.n)
+        for k in [1, 3, 8]:
+            top_docs, top_freqs = brute_topk(d_, c_, f_, k)
+            from collections import Counter
+
+            cnt = Counter(data.da[lo:hi].tolist())
+            expected = sorted(cnt.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+            got = [
+                (int(a), int(b))
+                for a, b in zip(np.asarray(top_docs), np.asarray(top_freqs))
+                if a >= 0
+            ]
+            assert got == expected, (p, k)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 2: runs grow with edits, not with copies
+# ---------------------------------------------------------------------------
+
+
+def test_ilcp_runs_lemma2():
+    base = "".join(RNG.choice(list("acgt"), 100))
+    d = 20
+
+    def runs_with_mutations(n_mut):
+        docs = []
+        for _ in range(d):
+            b = list(base)
+            for _ in range(n_mut):
+                b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+            docs.append("".join(b))
+        coll = concat_documents(docs)
+        return ilcp_num_runs(build_suffix_data(coll)), coll.n
+
+    runs0, n = runs_with_mutations(0)
+    runs3, _ = runs_with_mutations(3)
+    runs10, _ = runs_with_mutations(10)
+    # pure copies: rho <= r + 1 (base length + 1)
+    assert runs0 <= len(base) + 2
+    # runs grow roughly with edits, far below n
+    assert runs0 <= runs3 <= runs10
+    assert runs10 < n / 3
+
+
+def test_modeled_sizes_reasonable():
+    docs = DOC_SETS["versions"]
+    coll, data, index, csa, da = make_fixture(docs)
+    lb = index.modeled_bits_listing()
+    cb = index.modeled_bits_counting()
+    assert 0 < lb and 0 < cb
+    # far below a plain DA (n lg d bits)
+    import math
+
+    plain_da_bits = coll.n * max(1, math.ceil(math.log2(coll.d)))
+    assert lb < plain_da_bits
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.text(alphabet="ab", min_size=2, max_size=16), min_size=2, max_size=5),
+    st.text(alphabet="ab", min_size=1, max_size=3),
+)
+def test_ilcp_property_listing_counting(docs, pattern):
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    index = build_ilcp(data)
+    da = jnp.asarray(data.da)
+    enc = encode_pattern(pattern)
+    lo, hi = sa_range_for_pattern(data, enc)
+    exp = oracle_docs(data, lo, hi)
+    if lo < hi:
+        got_docs, cnt = ilcp_list_docs_da(index, da, lo, hi, coll.d + 1)
+        assert sorted(np.asarray(got_docs)[: int(cnt)].tolist()) == exp
+    got_count = int(ilcp_count_docs(index, lo, hi, len(enc)))
+    assert got_count == len(exp)

@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import csr_to_padded, embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rank import rank_pallas
+from repro.kernels.rmq import rmq_pallas
+from repro.succinct.bitvector import plain_from_bits
+from repro.succinct.rmq import rmq_build
+
+RNG = np.random.default_rng(53)
+
+
+# ---------------------------------------------------------------------------
+# rank
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 257, 4096])
+@pytest.mark.parametrize("density", [0.02, 0.5, 0.97])
+@pytest.mark.parametrize("block_q", [64, 256])
+def test_rank_kernel(n, density, block_q):
+    bits = (RNG.random(n) < density).astype(np.uint8)
+    bv = plain_from_bits(bits)
+    idx = jnp.asarray(RNG.integers(0, n + 1, 333), jnp.int32)
+    got = rank_pallas(bv.words, bv.ones_prefix, idx, block_q=block_q, interpret=True)
+    exp = ref.rank_ref(bv.words, bv.ones_prefix, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    # and against the ground truth
+    truth = np.concatenate([[0], np.cumsum(bits)])[np.asarray(idx)]
+    np.testing.assert_array_equal(np.asarray(got), truth)
+
+
+# ---------------------------------------------------------------------------
+# rmq
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [16, 100, 1000])
+@pytest.mark.parametrize("vrange", [3, 1000])
+def test_rmq_kernel(n, vrange):
+    values = RNG.integers(-vrange, vrange, n).astype(np.int32)
+    st = rmq_build(values)
+    q = 257
+    lo = RNG.integers(0, n, q)
+    hi = np.minimum(lo + RNG.integers(0, n, q), n - 1)
+    lo = np.minimum(lo, hi)
+    got = rmq_pallas(
+        st.values, st.table, jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32),
+        block_q=128, interpret=True,
+    )
+    exp = ref.rmq_ref(st.values, st.table, jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    for g, a, b in zip(np.asarray(got)[:50], lo[:50], hi[:50]):
+        assert g == a + int(np.argmin(values[a : b + 1]))
+
+
+# ---------------------------------------------------------------------------
+# embedding bag
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("V,D,B,L", [(100, 16, 37, 4), (1000, 64, 128, 1), (50, 8, 5, 7)])
+def test_embedding_bag_kernel(dtype, mode, V, D, B, L):
+    table = jnp.asarray(RNG.standard_normal((V, D)), dtype)
+    lens = RNG.integers(1, L + 1, B)
+    indices = np.concatenate([RNG.integers(0, V, l) for l in lens]).astype(np.int32)
+    offsets = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    padded = csr_to_padded(indices, offsets, L)
+    got = embedding_bag_pallas(
+        table, jnp.asarray(padded), mode=mode, block_b=32, interpret=True
+    )
+    exp = ref.embedding_bag_ref(
+        table.astype(jnp.float32), jnp.asarray(indices), jnp.asarray(offsets), mode
+    )
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(exp, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,H,S,Dh", [(2, 2, 128, 32), (1, 4, 256, 64)])
+def test_flash_attention_self(dtype, causal, B, H, S, Dh):
+    q = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.5, dtype)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.5, dtype)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.5, dtype)
+    got = flash_attention_pallas(
+        q, k, v, causal=causal, block_q=64, block_k=64, interpret=True
+    )
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(exp, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_flash_attention_decode_window():
+    """S_kv > S_q (decode with KV cache): query i sees <= offset + i."""
+    B, H, Sq, Skv, Dh = 1, 2, 64, 256, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, Sq, Dh)) * 0.5, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, Skv, Dh)) * 0.5, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, Skv, Dh)) * 0.5, jnp.float32)
+    got = flash_attention_pallas(
+        q, k, v, causal=True, block_q=32, block_k=64, interpret=True
+    )
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad():
+    """Kernel must be differentiable (training path)."""
+    B, H, S, Dh = 1, 2, 128, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, Dh)) * 0.3, jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return flash_attention_pallas(
+            q, k, v, causal=True, block_q=64, block_k=64, interpret=True
+        ).sum()
+
+    def loss_ref(q, k, v):
+        return ref.flash_attention_ref(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)

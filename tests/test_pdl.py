@@ -1,0 +1,247 @@
+"""Tests for Re-Pair (round-trip, compression on repetitive input) and PDL
+(structure invariants, listing vs oracle, top-k vs brute oracle, both modes
+and several (b, beta) settings)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.csa import build_csa
+from repro.core.pdl import build_pdl, pdl_list_docs, pdl_topk
+from repro.grammar.repair import (
+    repair_compress,
+    repair_compress_lists,
+    repair_expand_host,
+)
+
+RNG = np.random.default_rng(23)
+
+
+# ---------------------------------------------------------------------------
+# Re-Pair
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "seq",
+    [
+        [0, 1, 0, 1, 0, 1, 0, 1],
+        [3, 3, 3, 3, 3, 3, 3],
+        [0, 1, 2, 3, 4, 5],
+        [5, 4, 5, 4, 1, 5, 4, 5, 4, 1, 5, 4],
+        [],
+        [7],
+    ],
+    ids=["alternating", "runs", "unique", "nested", "empty", "single"],
+)
+def test_repair_roundtrip(seq):
+    g = repair_compress(seq, alphabet=8)
+    back = repair_expand_host(g, g.seq)
+    np.testing.assert_array_equal(back, np.asarray(seq, dtype=np.int64))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 5), max_size=200))
+def test_repair_roundtrip_property(seq):
+    g = repair_compress(seq, alphabet=6)
+    back = repair_expand_host(g, g.seq)
+    np.testing.assert_array_equal(back, np.asarray(seq, dtype=np.int64))
+
+
+def test_repair_compresses_repetitive():
+    block = RNG.integers(0, 10, 16).tolist()
+    seq = block * 50
+    g = repair_compress(seq, alphabet=10)
+    assert len(g.seq) < len(seq) / 8
+    back = repair_expand_host(g, g.seq)
+    np.testing.assert_array_equal(back, seq)
+
+
+def test_repair_lists_shared_grammar():
+    lists = [[1, 2, 3, 4], [1, 2, 3, 4, 5], [1, 2, 3, 4], [9], []]
+    g, segs = repair_compress_lists(lists, alphabet=10)
+    assert len(segs) == len(lists)
+    for seg, orig in zip(segs, lists):
+        back = repair_expand_host(g, seg)
+        np.testing.assert_array_equal(back, np.asarray(orig, dtype=np.int64))
+    # shared rule reused across lists 0 and 2 -> fewer total symbols
+    assert sum(len(s) for s in segs) < sum(len(l) for l in lists)
+
+
+def test_repair_aaa_overlap():
+    seq = [2] * 9  # "aaaaaaaaa" with pair (2,2)
+    g = repair_compress(seq, alphabet=3)
+    back = repair_expand_host(g, g.seq)
+    np.testing.assert_array_equal(back, seq)
+
+
+# ---------------------------------------------------------------------------
+# PDL
+# ---------------------------------------------------------------------------
+
+
+def make_fixture(docs, **pdl_kwargs):
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    csa = build_csa(data, sample_rate=4)
+    index = build_pdl(data, **pdl_kwargs)
+    return coll, data, csa, index
+
+
+def oracle_docs(data, lo, hi):
+    return sorted(set(data.da[lo:hi].tolist()))
+
+
+def oracle_topk(data, lo, hi, k):
+    from collections import Counter
+
+    c = Counter(data.da[lo:hi].tolist())
+    return sorted(c.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+
+
+def _versions(n_docs=10, length=50, muts=3):
+    base = "".join(RNG.choice(list("acgt"), length))
+    out = []
+    for _ in range(n_docs):
+        b = list(base)
+        for _ in range(muts):
+            b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+        out.append("".join(b))
+    return out
+
+
+def patterns_for(docs, max_len=4):
+    pats = set()
+    for doc in docs:
+        for m in range(1, max_len + 1):
+            for i in range(0, max(1, len(doc) - m + 1), 3):
+                pats.add(doc[i : i + m])
+    return sorted(pats)
+
+
+@pytest.mark.parametrize(
+    "block_size,beta,mode",
+    [
+        (4, 1.0, "list"),
+        (4, 16.0, "list"),
+        (8, None, "list"),
+        (4, 1.0, "topk"),
+        (8, None, "topk"),
+        (2, 4.0, "topk"),
+    ],
+)
+def test_pdl_structure_invariants(block_size, beta, mode):
+    docs = _versions(8, 40)
+    coll, data, csa, index = make_fixture(
+        docs, block_size=block_size, beta=beta, mode=mode
+    )
+    starts = np.asarray(index.leaf_starts)
+    # tiling
+    assert starts[0] == 0 and starts[-1] == coll.n
+    assert (np.diff(starts) >= 1).all()
+    assert (np.diff(starts) <= block_size).all()
+    # first-child pointers well-formed
+    pf = np.asarray(index.parent_of)
+    isf = np.asarray(index.is_first_child)
+    assert ((pf >= 0) == isf).all()
+    if index.I:
+        nl = np.asarray(index.next_leaf)
+        assert (nl >= 1).all() and (nl <= index.L).all()
+
+
+def test_pdl_listing_matches_oracle():
+    docs = _versions(8, 40)
+    coll, data, csa, index = make_fixture(docs, block_size=4, beta=2.0, mode="list")
+    max_df = coll.d + 1
+    for p in patterns_for(docs):
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        got_docs, cnt = pdl_list_docs(index, csa, lo, hi, max_df, max_buf=512)
+        got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+        assert got == oracle_docs(data, lo, hi), (p, lo, hi)
+
+
+def test_pdl_listing_beta_none():
+    docs = _versions(6, 30)
+    coll, data, csa, index = make_fixture(docs, block_size=8, beta=None, mode="list")
+    max_df = coll.d + 1
+    for p in patterns_for(docs)[::2]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        got_docs, cnt = pdl_list_docs(index, csa, lo, hi, max_df, max_buf=512)
+        got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+        assert got == oracle_docs(data, lo, hi), p
+
+
+@pytest.mark.parametrize("k", [1, 3, 10])
+def test_pdl_topk_matches_oracle(k):
+    docs = _versions(9, 45)
+    coll, data, csa, index = make_fixture(docs, block_size=4, beta=2.0, mode="topk")
+    for p in patterns_for(docs)[::2]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        topd, topf = pdl_topk(index, csa, lo, hi, k, max_buf=1024)
+        got = [
+            (int(a), int(b))
+            for a, b in zip(np.asarray(topd), np.asarray(topf))
+            if a >= 0
+        ]
+        assert got == oracle_topk(data, lo, hi, k), (p, k)
+
+
+def test_pdl_topk_inverted_index_mode():
+    """beta=None + freqs = the paper's PDL-b+F: every internal node stored."""
+    docs = _versions(6, 30)
+    coll, data, csa, index = make_fixture(docs, block_size=4, beta=None, mode="topk")
+    for p in patterns_for(docs)[::3]:
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        topd, topf = pdl_topk(index, csa, lo, hi, 5, max_buf=1024)
+        got = [
+            (int(a), int(b))
+            for a, b in zip(np.asarray(topd), np.asarray(topf))
+            if a >= 0
+        ]
+        assert got == oracle_topk(data, lo, hi, 5), p
+
+
+def test_pdl_repetitive_compresses():
+    """On a repetitive collection the grammar-compressed lists must be much
+    smaller than the raw stored lists."""
+    docs = _versions(20, 60, muts=1)
+    coll, data, csa, index = make_fixture(docs, block_size=4, beta=None, mode="list")
+    raw_symbols = index.total_docs_stored
+    stored_symbols = int(index.A.shape[0])
+    assert stored_symbols < raw_symbols  # grammar won something
+    assert index.modeled_bits() > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.lists(st.text(alphabet="ab", min_size=2, max_size=14), min_size=2, max_size=5),
+    st.text(alphabet="ab", min_size=1, max_size=3),
+)
+def test_pdl_property(docs, pattern):
+    coll, data, csa, index = make_fixture(docs, block_size=3, beta=1.0, mode="list")
+    enc = encode_pattern(pattern)
+    lo, hi = sa_range_for_pattern(data, enc)
+    if lo >= hi:
+        return
+    got_docs, cnt = pdl_list_docs(index, csa, lo, hi, coll.d + 1, max_buf=256)
+    got = sorted(np.asarray(got_docs)[: int(cnt)].tolist())
+    assert got == oracle_docs(data, lo, hi)

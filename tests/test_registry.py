@@ -1,0 +1,80 @@
+"""Registry sanity: every (arch x shape) cell builds its abstract inputs and
+specs on a (1,1) host mesh (no device allocation), trees line up, and the
+reduced-config cells lower on the host mesh.
+
+The FULL production-mesh lowering is exercised by launch.dryrun (80 cells,
+see experiments/dryrun) — these tests keep the registry itself green in the
+normal test run without 512 virtual devices.
+"""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ALL_ARCHS, ARCH_SHAPES, build_cell
+from repro.launch.mesh import make_host_mesh
+
+MESH = make_host_mesh()
+
+
+def _spec_leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_cells_build_and_trees_match(arch):
+    for shape in ARCH_SHAPES[arch]:
+        cell = build_cell(arch, shape, MESH)
+        assert len(cell.abstract_args) == len(cell.in_specs)
+        for args, specs in zip(cell.abstract_args, cell.in_specs):
+            n_args = len(jax.tree.leaves(args))
+            n_specs = len(_spec_leaves(specs))
+            assert n_args == n_specs, (arch, shape)
+        meta = cell.meta
+        assert meta["model_flops"] > 0
+        assert meta["analytic_flops"] >= meta["model_flops"] * 0.99
+        assert meta["analytic_bytes"] > 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "fm", "nequip"])
+def test_reduced_cells_lower_on_host_mesh(arch):
+    shape = ARCH_SHAPES[arch][0]
+    cell = build_cell(arch, shape, MESH, reduced=True)
+    with MESH:
+        lowered = jax.jit(cell.step_fn).lower(*cell.abstract_args)
+        compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_total_cell_count():
+    total = sum(len(ARCH_SHAPES[a]) for a in ALL_ARCHS)
+    assert total == 40
+
+
+def test_dryrun_results_complete_if_present():
+    """CI-style gate on the recorded multi-pod dry-run: when the results
+    exist, all 80 cells must be OK with zero failures, every cell must
+    carry the three roofline terms, and both meshes must appear."""
+    import glob
+    import json
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    files = glob.glob(os.path.join(root, "*.json"))
+    if not files:
+        pytest.skip("dry-run results not generated in this environment")
+    cells = 0
+    meshes = set()
+    for path in files:
+        data = json.load(open(path))
+        assert not data.get("failures"), (path, data["failures"])
+        for r in data["results"]:
+            cells += 1
+            meshes.add(r["mesh"])
+            rl = r["roofline"]
+            for term in ("compute_s", "memory_s", "collective_s"):
+                assert rl[term] >= 0
+            assert rl["dominant"] in ("compute", "memory", "collective")
+    assert cells == 80, cells
+    assert meshes == {"16x16", "pod2x16x16"}

@@ -1,0 +1,153 @@
+"""Tests for Sadakane's counting structure: exactness on every suffix-tree
+node range (all variants), paper example, run-growth behaviour (Section 5.3),
+and agreement with ILCP counting on pattern loci."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.sada import (
+    VARIANTS,
+    build_sada,
+    compute_h_slots,
+    hprime_runs_of_ones,
+    sada_count,
+    sada_count_batch,
+)
+from repro.core.sufftree import lcp_interval_tree
+
+RNG = np.random.default_rng(31)
+
+
+def _versions(n_docs=8, length=40, muts=2, alpha="acgt"):
+    base = "".join(RNG.choice(list(alpha), length))
+    out = []
+    for _ in range(n_docs):
+        b = list(base)
+        for _ in range(muts):
+            b[RNG.integers(0, len(b))] = RNG.choice(list(alpha))
+        out.append("".join(b))
+    return out
+
+
+DOCSETS = {
+    "paper": ["TATA", "LATA", "AAAA"],
+    "versions": _versions(),
+    "random": ["".join(RNG.choice(list("ab"), RNG.integers(3, 30))) for _ in range(7)],
+    "identical": ["abcabc"] * 5,
+}
+
+
+@pytest.fixture(scope="module", params=list(DOCSETS))
+def fixture(request):
+    docs = DOCSETS[request.param]
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    return docs, coll, data
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_sada_exact_on_all_nodes(fixture, variant):
+    """df must be exact for every lcp-interval (suffix-tree node) range —
+    the structure's contract."""
+    docs, coll, data = fixture
+    s = build_sada(data, variant)
+    tree = lcp_interval_tree(data.lcp)
+    los = tree.lo.astype(np.int32)
+    his = tree.hi.astype(np.int32)
+    got = np.asarray(sada_count_batch(s, jnp.asarray(los), jnp.asarray(his)))
+    for g, lo, hi in zip(got, los, his):
+        exp = len(set(data.da[lo:hi].tolist()))
+        assert g == exp, (variant, lo, hi)
+
+
+@pytest.mark.parametrize("variant", ["plain", "sparse"])
+def test_sada_on_pattern_loci(fixture, variant):
+    docs, coll, data = fixture
+    s = build_sada(data, variant)
+    pats = set()
+    for doc in docs:
+        for m in (1, 2, 3):
+            for i in range(0, max(1, len(doc) - m), 2):
+                pats.add(doc[i : i + m])
+    for p in sorted(pats):
+        lo, hi = sa_range_for_pattern(data, encode_pattern(p))
+        if lo >= hi:
+            continue
+        # pattern loci are node ranges or single suffixes
+        got = int(sada_count(s, lo, hi))
+        exp = len(set(data.da[lo:hi].tolist()))
+        assert got == exp, p
+
+
+def test_sada_single_suffix_range(fixture):
+    docs, coll, data = fixture
+    s = build_sada(data, "plain")
+    # size-1 ranges are trivially node-aligned (leaves): df = 1
+    for lo in range(0, coll.n, 7):
+        assert int(sada_count(s, lo, lo + 1)) == 1
+
+
+def test_h_total_is_occ_minus_df_at_root(fixture):
+    docs, coll, data = fixture
+    H = compute_h_slots(data)
+    d_distinct = len(set(data.da.tolist()))
+    assert H.sum() == coll.n - d_distinct
+
+
+def test_runs_shrink_on_repetitive():
+    """Section 5.3: H' runs stay near-linear in base length, sublinear in
+    collection size, for copy+mutate collections."""
+    base = "".join(RNG.choice(list("acgt"), 100))
+
+    def runs_for(d, muts):
+        docs = []
+        for _ in range(d):
+            b = list(base)
+            for _ in range(muts):
+                b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+            docs.append("".join(b))
+        coll = concat_documents(docs)
+        data = build_suffix_data(coll)
+        return hprime_runs_of_ones(data), coll.n
+
+    r_small, n_small = runs_for(5, 1)
+    r_big, n_big = runs_for(20, 1)
+    # quadrupling the collection must not quadruple the runs
+    assert r_big < 2.5 * r_small, (r_small, r_big)
+    assert r_big < n_big / 2
+
+
+def test_modeled_sizes_ordering():
+    docs = _versions(12, 80, 1)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    sizes = {v: build_sada(data, v).modeled_bits() for v in VARIANTS}
+    # on repetitive data the compressed variants beat plain
+    assert sizes["rle"] < sizes["plain"]
+    assert sizes["sparse"] < sizes["plain"]
+
+
+def test_sada_agrees_with_ilcp_counting():
+    from repro.core.ilcp import build_ilcp, ilcp_count_docs
+
+    docs = _versions(6, 35, 2)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    s = build_sada(data, "sparse")
+    ilcp = build_ilcp(data)
+    pats = {doc[i : i + m] for doc in docs for m in (1, 2, 3) for i in range(0, 10)}
+    for p in sorted(pats):
+        enc = encode_pattern(p)
+        lo, hi = sa_range_for_pattern(data, enc)
+        if lo >= hi:
+            continue
+        a = int(sada_count(s, lo, hi))
+        b = int(ilcp_count_docs(ilcp, lo, hi, len(enc)))
+        assert a == b, p

@@ -1,0 +1,74 @@
+"""End-to-end tests of the RetrievalService (the paper's indexes behind the
+batched serving API) — all engines agree with brute-force oracles."""
+
+import numpy as np
+import pytest
+
+from repro.data.collections import SyntheticSpec, generate, random_substring_patterns
+from repro.serve.retrieval import RetrievalService
+
+
+@pytest.fixture(scope="module")
+def svc_and_truth():
+    coll = generate(
+        SyntheticSpec("version", n_base=4, n_variants=8, base_len=120,
+                      mutation_rate=0.01)
+    )
+    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    pats = random_substring_patterns(coll, 300, 5, 24)
+
+    # ground truth from raw documents
+    from repro.core.suffix import build_suffix_data, sa_range_for_pattern
+
+    data = build_suffix_data(coll)
+    truth = {}
+    for i, p in enumerate(pats):
+        lo, hi = sa_range_for_pattern(data, p)
+        docs = sorted(set(data.da[lo:hi].tolist()))
+        from collections import Counter
+
+        tf = Counter(data.da[lo:hi].tolist())
+        truth[i] = (docs, tf)
+    return svc, pats, truth
+
+
+def test_count_both_structures(svc_and_truth):
+    svc, pats, truth = svc_and_truth
+    sada = svc.count(pats)
+    ilcp = svc.count_ilcp(pats)
+    for i in range(len(pats)):
+        assert int(sada[i]) == len(truth[i][0])
+        assert int(ilcp[i]) == len(truth[i][0])
+
+
+@pytest.mark.parametrize("engine", ["auto", "brute", "ilcp", "pdl"])
+def test_listing_all_engines(svc_and_truth, engine):
+    svc, pats, truth = svc_and_truth
+    out = svc.list_docs(pats[:12], max_df=64, engine=engine)
+    for i, docs in enumerate(out):
+        assert docs == truth[i][0], (engine, i)
+
+
+def test_topk_matches_truth(svc_and_truth):
+    svc, pats, truth = svc_and_truth
+    out = svc.topk(pats[:12], k=5)
+    for i, hits in enumerate(out):
+        exp = sorted(truth[i][1].items(), key=lambda kv: (-kv[1], kv[0]))[:5]
+        assert hits == exp, i
+
+
+def test_tfidf_service(svc_and_truth):
+    svc, pats, truth = svc_and_truth
+    out = svc.tfidf([[pats[0], pats[1]]], k=5)
+    assert len(out) == 1 and len(out[0]) >= 1
+    # scores non-increasing
+    scores = [s for _, s in out[0]]
+    assert all(a >= b - 1e-6 for a, b in zip(scores, scores[1:]))
+
+
+def test_space_report(svc_and_truth):
+    svc, pats, truth = svc_and_truth
+    rep = svc.space_report()
+    assert rep["bwt_runs"] < rep["n"]
+    assert 0 < rep["sada_bpc"] < 8
+    assert 0 < rep["ilcp_counting_bpc"] < 32

@@ -1,0 +1,240 @@
+"""Unit + property tests for the succinct substrate.
+
+Oracles are plain numpy computations; structures must agree exactly.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.succinct import (
+    plain_from_bits,
+    rle_from_bits,
+    sparse_from_positions,
+    wm_build,
+    wm_access,
+    wm_count_less,
+    wm_rank,
+    rmq_build,
+    rmq_query,
+)
+from repro.succinct.bitvector import sparse_from_bits
+from repro.succinct.wavelet import wm_symbol_range
+
+RNG = np.random.default_rng(0)
+
+
+def oracle_rank1(bits, i):
+    return int(np.sum(bits[:i]))
+
+
+def oracle_select1(bits, j):
+    ones = np.flatnonzero(bits)
+    return int(ones[j]) if j < len(ones) else len(bits)
+
+
+def oracle_select0(bits, j):
+    zeros = np.flatnonzero(1 - bits)
+    return int(zeros[j]) if j < len(zeros) else len(bits)
+
+
+def make_builders():
+    return {
+        "plain": plain_from_bits,
+        "sparse": sparse_from_bits,
+        "rle": rle_from_bits,
+    }
+
+
+@pytest.mark.parametrize("kind", ["plain", "sparse", "rle"])
+@pytest.mark.parametrize(
+    "bits",
+    [
+        np.array([1, 0, 1, 1, 0, 0, 0, 1], dtype=np.uint8),
+        np.zeros(70, dtype=np.uint8),
+        np.ones(70, dtype=np.uint8),
+        (RNG.random(257) < 0.3).astype(np.uint8),
+        (RNG.random(1024) < 0.9).astype(np.uint8),
+        np.array([0, 0, 0, 1], dtype=np.uint8),
+        np.array([1], dtype=np.uint8),
+        np.array([0], dtype=np.uint8),
+    ],
+    ids=["small", "zeros", "ones", "sparse257", "dense1024", "tail1", "one1", "one0"],
+)
+def test_bitvector_rank_select_exhaustive(kind, bits):
+    bv = make_builders()[kind](bits)
+    n = len(bits)
+    m = int(bits.sum())
+
+    idx = jnp.arange(n + 1)
+    ranks = jax.vmap(bv.rank1)(idx)
+    expected = np.concatenate([[0], np.cumsum(bits)])
+    np.testing.assert_array_equal(np.asarray(ranks), expected)
+
+    ranks0 = jax.vmap(bv.rank0)(idx)
+    np.testing.assert_array_equal(np.asarray(ranks0), idx - expected)
+
+    if m:
+        sel = jax.vmap(bv.select1)(jnp.arange(m))
+        np.testing.assert_array_equal(np.asarray(sel), np.flatnonzero(bits))
+    if n - m:
+        sel0 = jax.vmap(bv.select0)(jnp.arange(n - m))
+        np.testing.assert_array_equal(np.asarray(sel0), np.flatnonzero(1 - bits))
+
+    # out-of-range select returns n
+    assert int(bv.select1(m)) == n
+    assert int(bv.select0(n - m)) == n
+
+    # access
+    got = np.asarray(jax.vmap(bv.get)(jnp.arange(n)))
+    np.testing.assert_array_equal(got, bits.astype(np.int32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(0, 1), min_size=1, max_size=300),
+    st.integers(0, 4),
+)
+def test_bitvector_property(bits, salt):
+    bits = np.asarray(bits, dtype=np.uint8)
+    n = len(bits)
+    i = int((salt * 7919) % (n + 1))
+    for builder in make_builders().values():
+        bv = builder(bits)
+        assert int(bv.rank1(i)) == oracle_rank1(bits, i)
+        # rank/select inverses
+        m = int(bits.sum())
+        if m:
+            j = salt % m
+            p = int(bv.select1(j))
+            assert bits[p] == 1
+            assert int(bv.rank1(p)) == j
+
+
+def test_rank_select_inverse_identity():
+    bits = (RNG.random(500) < 0.4).astype(np.uint8)
+    for builder in make_builders().values():
+        bv = builder(bits)
+        m = int(bits.sum())
+        js = jnp.arange(m)
+        sel = jax.vmap(bv.select1)(js)
+        back = jax.vmap(bv.rank1)(sel)
+        np.testing.assert_array_equal(np.asarray(back), np.arange(m))
+
+
+def test_sparse_from_positions_empty():
+    bv = sparse_from_positions(np.array([], dtype=np.int32), 10)
+    assert int(bv.rank1(10)) == 0
+    assert int(bv.select1(0)) == 10
+    assert int(bv.select0(3)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Wavelet matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sigma", [2, 3, 7, 16, 40])
+def test_wavelet_rank_access(sigma):
+    n = 400
+    seq = RNG.integers(0, sigma, n)
+    wm = wm_build(seq, sigma)
+
+    # access
+    got = np.asarray(jax.vmap(lambda i: wm_access(wm, i))(jnp.arange(n)))
+    np.testing.assert_array_equal(got, seq)
+
+    # rank_c at a grid of positions
+    for c in range(sigma):
+        pos = jnp.asarray([0, 1, n // 3, n // 2, n])
+        r = jax.vmap(lambda i: wm_rank(wm, c, i))(pos)
+        exp = [int(np.sum(seq[:p] == c)) for p in np.asarray(pos)]
+        np.testing.assert_array_equal(np.asarray(r), exp)
+
+
+def test_wavelet_count_less():
+    sigma = 13
+    n = 300
+    seq = RNG.integers(0, sigma, n)
+    wm = wm_build(seq, sigma)
+    cases = [(0, n, 5), (10, 200, 1), (0, 0, 3), (7, 8, 12), (0, n, 0), (0, n, sigma)]
+    for lo, hi, m in cases:
+        got = int(wm_count_less(wm, lo, hi, m))
+        exp = int(np.sum(seq[lo:hi] < m))
+        assert got == exp, (lo, hi, m)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 15), min_size=1, max_size=200),
+    st.integers(0, 17),
+)
+def test_wavelet_count_less_property(seq, m):
+    seq = np.asarray(seq)
+    wm = wm_build(seq, 16)
+    lo, hi = 0, len(seq)
+    assert int(wm_count_less(wm, lo, hi, m)) == int(np.sum(seq < m))
+
+
+def test_wavelet_symbol_range():
+    seq = np.array([3, 1, 3, 0, 3, 1, 2, 3])
+    wm = wm_build(seq, 4)
+    a, b = wm_symbol_range(wm, 3, 1, 7)  # occurrences of 3 in seq[1:7]
+    # seq[1:7] = [1,3,0,3,1,2] -> two 3s, which are global occurrences 1 and 2
+    assert (int(a), int(b)) == (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# RMQ
+# ---------------------------------------------------------------------------
+
+
+def oracle_rmq_leftmost(values, lo, hi):
+    seg = values[lo : hi + 1]
+    return lo + int(np.argmin(seg))  # np.argmin returns leftmost min
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 64, 100])
+def test_rmq_exhaustive_small(n):
+    values = RNG.integers(0, 5, n)  # small range -> many ties
+    rmq = rmq_build(values)
+    for lo in range(n):
+        for hi in range(lo, n):
+            got = int(rmq_query(rmq, lo, hi))
+            exp = oracle_rmq_leftmost(values, lo, hi)
+            assert got == exp, (lo, hi, values.tolist())
+
+
+def test_rmq_batched():
+    n = 1000
+    values = RNG.integers(-50, 50, n)
+    rmq = rmq_build(values)
+    los = RNG.integers(0, n, 200)
+    his = np.minimum(los + RNG.integers(0, n, 200), n - 1)
+    los = np.minimum(los, his)
+    got = jax.vmap(lambda a, b: rmq_query(rmq, a, b))(jnp.asarray(los), jnp.asarray(his))
+    for g, lo, hi in zip(np.asarray(got), los, his):
+        assert g == oracle_rmq_leftmost(values, lo, hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(-10, 10), min_size=1, max_size=120), st.data())
+def test_rmq_property(values, data):
+    values = np.asarray(values)
+    n = len(values)
+    lo = data.draw(st.integers(0, n - 1))
+    hi = data.draw(st.integers(lo, n - 1))
+    rmq = rmq_build(values)
+    assert int(rmq_query(rmq, lo, hi)) == oracle_rmq_leftmost(values, lo, hi)
+
+
+def test_modeled_bits_sane():
+    bits = (RNG.random(10_000) < 0.01).astype(np.uint8)
+    plain = plain_from_bits(bits).modeled_bits()
+    sparse = sparse_from_bits(bits).modeled_bits()
+    rle = rle_from_bits(bits).modeled_bits()
+    # sparse/rle must beat plain on a 1% density vector
+    assert sparse < plain
+    assert rle < plain

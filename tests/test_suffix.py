@@ -1,0 +1,227 @@
+"""Tests for suffix machinery: SA (prefix doubling vs naive), LCP, DA, C,
+ILCP (against the paper's running example and naive oracles), and the CSA
+(backward search + locate vs the suffix array)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    naive_lcp_of,
+    naive_suffix_array,
+    sa_range_for_pattern,
+)
+from repro.core.csa import (
+    build_csa,
+    csa_da_at,
+    csa_lookup,
+    csa_lookup_batch,
+    csa_search,
+    csa_search_batch,
+)
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# The paper's running example (Section 3.1)
+# ---------------------------------------------------------------------------
+
+PAPER_DOCS = ["TATA", "LATA", "AAAA"]  # paper writes them with trailing $
+
+
+@pytest.fixture(scope="module")
+def paper_data():
+    coll = concat_documents(PAPER_DOCS)
+    return build_suffix_data(coll)
+
+
+def test_paper_example_sa(paper_data):
+    # Paper (1-based): SA = <15,10,5,14,9,4,13,12,11,7,2,6,8,3,1>
+    expected = np.asarray([15, 10, 5, 14, 9, 4, 13, 12, 11, 7, 2, 6, 8, 3, 1]) - 1
+    np.testing.assert_array_equal(paper_data.sa, expected)
+
+
+def test_paper_example_da(paper_data):
+    # Paper: DA = <3,2,1,3,2,1,3,3,3,2,1,2,2,1,1> (1-based doc ids)
+    expected = np.asarray([3, 2, 1, 3, 2, 1, 3, 3, 3, 2, 1, 2, 2, 1, 1]) - 1
+    np.testing.assert_array_equal(paper_data.da, expected)
+
+
+def test_paper_example_ilcp(paper_data):
+    # Paper: ILCP = <0,0,0,0,0,0,1,2,3,1,1,0,0,0,2>
+    expected = np.asarray([0, 0, 0, 0, 0, 0, 1, 2, 3, 1, 1, 0, 0, 0, 2])
+    np.testing.assert_array_equal(paper_data.ilcp, expected)
+
+
+def test_paper_example_pattern_range(paper_data):
+    # P = "TA" -> SA[13..15] (1-based) = [12, 15) 0-based
+    lo, hi = sa_range_for_pattern(paper_data, encode_pattern("TA"))
+    assert (lo, hi) == (12, 15)
+    # ILCP[12:15] = <0, 0, 2>; values < |P|=2 at positions 12, 13 -> docs 2, 1
+    assert paper_data.ilcp[12:15].tolist() == [0, 0, 2]
+    assert paper_data.da[12:15].tolist() == [1, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Randomized SA / LCP / ILCP correctness
+# ---------------------------------------------------------------------------
+
+
+def random_docs(n_docs, max_len, sigma, repetitive=False):
+    docs = []
+    if repetitive:
+        base = RNG.integers(0, sigma, RNG.integers(4, max_len)).astype(np.int32)
+        for _ in range(n_docs):
+            doc = base.copy()
+            nmut = max(1, len(doc) // 10)
+            pos = RNG.integers(0, len(doc), nmut)
+            doc[pos] = RNG.integers(0, sigma, nmut)
+            docs.append(doc)
+    else:
+        for _ in range(n_docs):
+            docs.append(RNG.integers(0, sigma, RNG.integers(1, max_len)).astype(np.int32))
+    return docs
+
+
+@pytest.mark.parametrize("repetitive", [False, True])
+@pytest.mark.parametrize("sigma", [2, 4, 26])
+def test_sa_matches_naive(sigma, repetitive):
+    docs = random_docs(5, 20, sigma, repetitive)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    np.testing.assert_array_equal(data.sa, naive_suffix_array(coll))
+
+
+def test_lcp_matches_naive():
+    docs = random_docs(4, 15, 3, repetitive=True)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    for i in range(1, coll.n):
+        exp = naive_lcp_of(coll, int(data.sa[i - 1]), int(data.sa[i]))
+        assert data.lcp[i] == exp, i
+
+
+def test_ilcp_matches_per_document_lcp():
+    """Definition 1 checked directly: build each document's own LCP array
+    and interleave by DA."""
+    docs = random_docs(4, 12, 3, repetitive=True)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+
+    expected = np.zeros(coll.n, dtype=np.int32)
+    for j, doc in enumerate(docs):
+        sub = concat_documents([doc])
+        sub_data = build_suffix_data(sub)
+        # positions in global SA belonging to doc j, in SA order
+        mask = data.da == j
+        # LCP array of the single document (its SA order matches, Lemma 1)
+        expected[mask] = sub_data.lcp
+    np.testing.assert_array_equal(data.ilcp, expected)
+
+
+def test_c_array_definition():
+    docs = random_docs(4, 12, 3)
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    for i in range(coll.n):
+        prev = -1
+        for h in range(i - 1, -1, -1):
+            if data.da[h] == data.da[i]:
+                prev = h
+                break
+        assert data.c[i] == prev
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.text(alphabet="ab", min_size=1, max_size=12), min_size=1, max_size=5))
+def test_sa_property_strings(docs):
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    np.testing.assert_array_equal(data.sa, naive_suffix_array(coll))
+    # SA must be a permutation; LCP sanity
+    assert sorted(data.sa.tolist()) == list(range(coll.n))
+    assert (data.ilcp >= 0).all() and (data.ilcp <= coll.n).all()
+
+
+# ---------------------------------------------------------------------------
+# CSA: backward search and locate
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def csa_fixture():
+    docs = ["mississippi", "missouri", "mission", "miss", "sippi", "pimiss"] * 2
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    csa = build_csa(data, sample_rate=4)
+    return coll, data, csa
+
+
+def test_csa_search_matches_sa_binary_search(csa_fixture):
+    coll, data, csa = csa_fixture
+    patterns = ["iss", "ssi", "m", "miss", "pi", "q", "mississippi", "x", "i"]
+    max_m = max(len(p) for p in patterns)
+    padded = np.zeros((len(patterns), max_m), dtype=np.int32)
+    lengths = np.zeros(len(patterns), dtype=np.int32)
+    for qi, p in enumerate(patterns):
+        enc = encode_pattern(p)
+        padded[qi, : len(enc)] = enc
+        lengths[qi] = len(enc)
+    lo, hi = csa_search_batch(csa, padded, lengths)
+    for qi, p in enumerate(patterns):
+        exp = sa_range_for_pattern(data, encode_pattern(p))
+        assert (int(lo[qi]), int(hi[qi])) == exp, p
+
+
+def test_csa_lookup_matches_sa(csa_fixture):
+    coll, data, csa = csa_fixture
+    idx = jnp.arange(coll.n)
+    got = np.asarray(csa_lookup_batch(csa, idx))
+    np.testing.assert_array_equal(got, data.sa)
+
+
+def test_csa_da_matches(csa_fixture):
+    coll, data, csa = csa_fixture
+    got = np.asarray(jax.vmap(lambda i: csa_da_at(csa, i))(jnp.arange(coll.n)))
+    np.testing.assert_array_equal(got, data.da)
+
+
+def test_csa_search_empty_and_missing(csa_fixture):
+    coll, data, csa = csa_fixture
+    lo, hi = csa_search(csa, jnp.zeros(4, jnp.int32), 0)
+    assert (int(lo), int(hi)) == (0, coll.n)
+    enc = encode_pattern("zzz")
+    pat = np.zeros(4, dtype=np.int32)
+    pat[: len(enc)] = enc
+    lo, hi = csa_search(csa, pat, 3)
+    assert int(lo) == int(hi)
+
+
+def test_csa_modeled_sizes(csa_fixture):
+    coll, data, csa = csa_fixture
+    assert csa.bwt_runs < coll.n  # repetitive-ish: BWT must have runs
+    assert csa.modeled_bits_rlcsa() > 0
+    assert csa.modeled_bits_plain_fm() > 0
+
+
+def test_csa_repetitive_runs_shrink():
+    """RLCSA's premise: BWT runs grow with edits, not with copies."""
+    base = "".join(RNG.choice(list("acgt"), 200))
+    docs_rep = [base] * 20
+    mutated = []
+    for _ in range(20):
+        b = list(base)
+        for _ in range(3):
+            b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+        mutated.append("".join(b))
+    runs_copies = build_csa(build_suffix_data(concat_documents(docs_rep))).bwt_runs
+    runs_mut = build_csa(build_suffix_data(concat_documents(mutated))).bwt_runs
+    n = sum(len(d) + 1 for d in docs_rep)
+    assert runs_copies < n / 4
+    assert runs_copies <= runs_mut

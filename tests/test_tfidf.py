@@ -1,0 +1,128 @@
+"""TF-IDF ranked multi-term queries vs a brute-force oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.csa import build_csa
+from repro.core.pdl import build_pdl
+from repro.core.sada import build_sada
+from repro.core.tfidf import tfidf_topk, tfidf_topk_batch, tfidf_topk_incremental
+
+RNG = np.random.default_rng(41)
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    base = "the quick brown fox jumps over the lazy dog "
+    docs = []
+    for i in range(12):
+        words = base.split()
+        RNG.shuffle(words)
+        extra = ["fox"] * (i % 4) + ["dog"] * (i % 3) + ["cat"] * (i % 2)
+        docs.append(" ".join(words + extra))
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    csa = build_csa(data, sample_rate=4)
+    pdl = build_pdl(data, block_size=8, beta=None, mode="topk")
+    sada = build_sada(data, "sparse")
+    return docs, coll, data, csa, pdl, sada
+
+
+def oracle_tfidf(docs, data, terms, k, conjunctive):
+    d = len(docs)
+    # df and tf by substring counting over raw documents
+    def count_occ(doc, t):
+        c, start = 0, 0
+        while True:
+            j = doc.find(t, start)
+            if j < 0:
+                return c
+            c += 1
+            start = j + 1
+
+    tfs = [[count_occ(doc, t) for doc in docs] for t in terms]
+    dfs = [sum(1 for x in row if x > 0) for row in tfs]
+    gs = [np.log2(d / max(df, 1)) for df in dfs]
+    scores = {}
+    for doc_id in range(d):
+        if conjunctive and not all(tfs[t][doc_id] > 0 for t in range(len(terms))):
+            continue
+        w = sum(tfs[t][doc_id] * gs[t] for t in range(len(terms)))
+        if any(tfs[t][doc_id] > 0 for t in range(len(terms))):
+            scores[doc_id] = w
+    ranked = sorted(scores.items(), key=lambda kv: (-kv[1], kv[0]))[:k]
+    return ranked
+
+
+def ranges_for(data, terms, max_t=4):
+    out = np.zeros((max_t, 2), dtype=np.int32)
+    valid = np.zeros(max_t, dtype=bool)
+    for i, t in enumerate(terms):
+        lo, hi = sa_range_for_pattern(data, encode_pattern(t))
+        out[i] = (lo, hi)
+        valid[i] = True
+    return out, valid
+
+
+QUERIES = [
+    (["fox"], False),
+    (["fox", "dog"], False),
+    (["fox", "dog"], True),
+    (["fox", "dog", "cat"], False),
+    (["fox", "dog", "cat"], True),
+    (["quick", "lazy"], True),
+    (["zebra"], False),
+    (["zebra", "fox"], True),
+]
+
+
+@pytest.mark.parametrize("terms,conj", QUERIES)
+@pytest.mark.parametrize("k", [3, 10])
+def test_tfidf_matches_oracle(fixture, terms, conj, k):
+    docs, coll, data, csa, pdl, sada = fixture
+    ranges, valid = ranges_for(data, terms)
+    topd, tops = tfidf_topk(pdl, csa, sada, ranges, valid, k, conj, max_buf=512)
+    got = [
+        (int(a), float(b))
+        for a, b in zip(np.asarray(topd), np.asarray(tops))
+        if a >= 0
+    ]
+    exp = oracle_tfidf(docs, data, terms, k, conj)
+    assert [g[0] for g in got] == [e[0] for e in exp], (terms, conj, got, exp)
+    for (gd, gw), (ed, ew) in zip(got, exp):
+        assert abs(gw - ew) < 1e-3, (terms, conj)
+
+
+def test_tfidf_batch(fixture):
+    docs, coll, data, csa, pdl, sada = fixture
+    rs, vs = [], []
+    for terms, conj in QUERIES[:4]:
+        r, v = ranges_for(data, terms)
+        rs.append(r)
+        vs.append(v)
+    topd, tops = tfidf_topk_batch(
+        pdl, csa, sada, np.stack(rs), np.stack(vs), 5, False, max_buf=512
+    )
+    for qi, (terms, _) in enumerate(QUERIES[:4]):
+        got = [int(a) for a in np.asarray(topd[qi]) if a >= 0]
+        exp = [e[0] for e in oracle_tfidf(docs, data, terms, 5, False)]
+        assert got == exp, terms
+
+
+@pytest.mark.parametrize("terms,conj", [(["fox", "dog"], False), (["fox", "dog"], True), (["fox", "dog", "cat"], True)])
+def test_tfidf_incremental_same_topk(fixture, terms, conj):
+    docs, coll, data, csa, pdl, sada = fixture
+    ranges, valid = ranges_for(data, terms)
+    k = 5
+    inc_docs, inc_w = tfidf_topk_incremental(
+        pdl, csa, sada, ranges[: len(terms)], k, conj, max_buf=512
+    )
+    exp = oracle_tfidf(docs, data, terms, k, conj)
+    assert inc_docs == [e[0] for e in exp], (terms, conj, inc_docs, exp)

@@ -1,0 +1,91 @@
+"""WT document lister vs oracle (distinct docs AND frequencies)."""
+
+from collections import Counter
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.suffix import (
+    build_suffix_data,
+    concat_documents,
+    encode_pattern,
+    sa_range_for_pattern,
+)
+from repro.core.wtlist import build_da_wavelet, wt_list_docs, wt_topk
+
+RNG = np.random.default_rng(71)
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    base = "".join(RNG.choice(list("acgt"), 60))
+    docs = []
+    for _ in range(9):
+        b = list(base)
+        for _ in range(4):
+            b[RNG.integers(0, len(b))] = RNG.choice(list("acgt"))
+        docs.append("".join(b))
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    wm = build_da_wavelet(data.da, coll.d)
+    return docs, coll, data, wm
+
+
+def test_wt_listing_matches_oracle(fixture):
+    docs, coll, data, wm = fixture
+    pats = {d[i : i + m] for d in docs for m in (1, 2, 3) for i in range(0, 40, 3)}
+    for p in sorted(pats):
+        lo, hi = sa_range_for_pattern(data, encode_pattern(p))
+        if lo >= hi:
+            continue
+        got_docs, got_freqs, cnt = wt_list_docs(wm, lo, hi, coll.d + 1)
+        got = {
+            int(a): int(b)
+            for a, b in zip(np.asarray(got_docs)[: int(cnt)],
+                            np.asarray(got_freqs)[: int(cnt)])
+        }
+        exp = dict(Counter(data.da[lo:hi].tolist()))
+        assert got == exp, p
+
+
+def test_wt_docs_sorted_ascending(fixture):
+    docs, coll, data, wm = fixture
+    lo, hi = 0, coll.n
+    got_docs, _, cnt = wt_list_docs(wm, lo, hi, coll.d + 1)
+    ds = np.asarray(got_docs)[: int(cnt)]
+    assert (np.diff(ds) > 0).all()  # left-first traversal emits sorted ids
+
+
+def test_wt_topk(fixture):
+    docs, coll, data, wm = fixture
+    for p in ["a", "ac", "cg"]:
+        lo, hi = sa_range_for_pattern(data, encode_pattern(p))
+        if lo >= hi:
+            continue
+        topd, topf = wt_topk(wm, lo, hi, 4, coll.d + 1)
+        exp = sorted(Counter(data.da[lo:hi].tolist()).items(),
+                     key=lambda kv: (-kv[1], kv[0]))[:4]
+        got = [(int(a), int(b)) for a, b in zip(np.asarray(topd), np.asarray(topf))
+               if a >= 0]
+        assert got == exp, p
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.text(alphabet="ab", min_size=1, max_size=10), min_size=2,
+                max_size=6), st.data())
+def test_wt_property(docs, data_strat):
+    coll = concat_documents(docs)
+    data = build_suffix_data(coll)
+    wm = build_da_wavelet(data.da, coll.d)
+    lo = data_strat.draw(st.integers(0, coll.n - 1))
+    hi = data_strat.draw(st.integers(lo + 1, coll.n))
+    got_docs, got_freqs, cnt = wt_list_docs(wm, lo, hi, coll.d + 1)
+    got = {
+        int(a): int(b)
+        for a, b in zip(np.asarray(got_docs)[: int(cnt)],
+                        np.asarray(got_freqs)[: int(cnt)])
+    }
+    assert got == dict(Counter(data.da[lo:hi].tolist()))
