@@ -7,7 +7,6 @@ reported separately by collection_stats)."""
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -9,6 +9,7 @@ Sections:
     fig9      single-term top-k                         (Fig 9)
     fig10     document counting                         (Fig 10)
     table2    TF-IDF ranked multi-term throughput       (Table 2)
+    serve     batched serving QPS / latency percentiles
     roofline  (arch x shape x mesh) roofline terms from the dry-run
 """
 
@@ -18,7 +19,7 @@ import argparse
 import time
 
 
-SECTIONS = ["table1", "fig5", "fig6", "fig9", "fig10", "table2", "roofline"]
+SECTIONS = ["table1", "fig5", "fig6", "fig9", "fig10", "table2", "serve", "roofline"]
 
 
 def main() -> None:
@@ -55,6 +56,10 @@ def main() -> None:
                 from benchmarks import tfidf_bench
 
                 tfidf_bench.run()
+            elif section == "serve":
+                from benchmarks import serve_bench
+
+                serve_bench.run()
             elif section == "roofline":
                 from benchmarks import roofline_report
 

@@ -1,0 +1,104 @@
+"""End-to-end batched serving benchmark: QPS and latency percentiles.
+
+Measures the three planned endpoints (listing, top-k, tf-idf) of
+``RetrievalService`` at batch sizes {1, 16, 128} — each batch is ONE
+compiled program per shape bucket, so after the first (warmup) call per
+bucket the loop below is pure execution.  Emits the usual CSV rows plus an
+optional dry-run-shaped JSON ({"results": [...], "failures": []}) so the
+perf trajectory can track serving throughput next to the roofline numbers.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--out experiments/serve_bench.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_collections, emit
+from repro.data.collections import random_substring_patterns
+from repro.serve.retrieval import RetrievalService
+
+BATCH_SIZES = (1, 16, 128)
+ITERS = 20
+
+
+def _timed(fn, iters: int = ITERS):
+    fn()  # warmup: compiles the bucket's program
+    lat = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        lat.append(time.perf_counter() - t0)
+    ms = np.asarray(lat) * 1e3
+    return float(np.percentile(ms, 50)), float(np.percentile(ms, 99)), float(ms.mean())
+
+
+def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
+        k: int = 10, max_df: int = 128, max_buf: int = 1024, out: str | None = None):
+    rows, results = [], []
+    for name in collections:
+        coll = bench_collections()[name]
+        svc = RetrievalService.build(coll, block_size=32, beta=8.0)
+        workload = random_substring_patterns(coll, 1500, 6, 256)
+        if not workload:
+            continue
+        rng = np.random.default_rng(0)
+
+        for B in batch_sizes:
+            idx = rng.integers(0, len(workload), size=(ITERS + 1, B))
+            batches = [[workload[i] for i in row] for row in idx]
+            it = iter(range(10_000))
+
+            def batch():
+                return batches[next(it) % len(batches)]
+
+            def pairs(b):
+                return [b[i : i + 2] for i in range(0, len(b), 2)] or [b[:1]]
+
+            endpoints = {
+                "list": lambda: svc.list_docs(batch(), max_df=max_df, max_buf=max_buf),
+                "topk": lambda: svc.topk(batch(), k=k, max_buf=max_buf),
+                "tfidf": lambda: svc.tfidf(pairs(batch()), k=k, max_buf=max_buf),
+            }
+            for ep, fn in endpoints.items():
+                p50, p99, mean = _timed(fn)
+                nq = B if ep != "tfidf" else max(1, B // 2)
+                qps = nq / (mean / 1e3)
+                rows.append(
+                    [name, ep, B, round(p50, 2), round(p99, 2), round(qps, 0)]
+                )
+                results.append(
+                    {
+                        "collection": name,
+                        "endpoint": ep,
+                        "batch": B,
+                        "p50_ms": round(p50, 3),
+                        "p99_ms": round(p99, 3),
+                        "qps": round(qps, 1),
+                        "compiles": dict(svc.compile_counts),
+                    }
+                )
+    emit(rows, ["collection", "endpoint", "batch", "p50_ms", "p99_ms", "qps"])
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"results": results, "failures": []}, f, indent=1)
+        print(f"wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    args = ap.parse_args()
+    run(batch_sizes=tuple(args.batches), out=args.out)
+
+
+if __name__ == "__main__":
+    main()

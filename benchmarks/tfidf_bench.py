@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax
 
 from benchmarks.common import bench_collections, emit, patterns_for, suffix_data_for
 from repro.serve.retrieval import RetrievalService

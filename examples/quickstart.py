@@ -1,15 +1,15 @@
 """Quickstart: build a document-retrieval index over a repetitive
-collection and run the paper's three query types plus TF-IDF.
+collection and run the paper's three query types plus TF-IDF — all served
+by the batched engine (one compiled program per query type and shape
+bucket; see repro.serve.retrieval).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.suffix import concat_documents
 from repro.data.collections import SyntheticSpec, generate
 from repro.serve.retrieval import RetrievalService
-from repro.core.suffix import encode_pattern
 
 
 def main():
@@ -36,13 +36,21 @@ def main():
         if (sub > 0).all():
             pats.append(np.asarray(sub - 1, dtype=np.int32) + 1)
 
-    print("\ndocument counting (df):", svc.count(pats).tolist())
+    # one fused program computes ranges, df, occ AND the engine dispatch
+    plan = svc.plan(pats)
+    print("\nquery plan (device-computed dispatch):")
+    print("  df     :", plan["df"].tolist())
+    print("  occ    :", plan["occ"].tolist())
+    print("  engine :", plan["engine"].tolist(), "(1=brute, 3=pdl)")
     print("counting cross-check  :", svc.count_ilcp(pats).tolist())
 
-    listing = svc.list_docs(pats, max_df=coll.d + 1)
-    print("\ndocument listing:")
-    for i, docs in enumerate(listing):
-        print(f"  pattern {i}: {len(docs)} docs -> {docs[:10]}{'...' if len(docs) > 10 else ''}")
+    # batched listing: docs come back as a padded array (ascending ids,
+    # -1 sentinels) — the list view is a host convenience on top of it
+    docs, counts = svc.list_docs_arrays(pats, max_df=coll.d + 1)
+    print("\ndocument listing (batched):")
+    for i in range(len(pats)):
+        row = docs[i, : counts[i]].tolist()
+        print(f"  pattern {i}: {counts[i]} docs -> {row[:10]}{'...' if counts[i] > 10 else ''}")
 
     print("\ntop-5 by term frequency:")
     for i, hits in enumerate(svc.topk(pats, k=5)):
@@ -52,6 +60,11 @@ def main():
     out = svc.tfidf([[pats[0], pats[1]], [pats[2], pats[3]]], k=5)
     for i, hits in enumerate(out):
         print(f"  query {i}: {[(d, round(s, 2)) for d, s in hits]}")
+
+    # every batched endpoint is bit-identical to the per-query reference
+    assert svc.list_docs(pats) == svc.list_docs(pats, engine="reference")
+    print(f"\nreference parity OK; compiles per endpoint: "
+          f"{dict(svc.compile_counts)}")
 
 
 if __name__ == "__main__":

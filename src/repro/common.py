@@ -10,7 +10,6 @@ through ``jit``/``vmap`` unchanged); integer metadata that must be *static*
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Sequence
 
 import jax

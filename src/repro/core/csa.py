@@ -115,8 +115,14 @@ def csa_search(csa: CSA, pattern, length):
         j = length - 1 - t
         active = (t < length) & (lo < hi)
         c = pattern[jnp.clip(j, 0, max_m - 1)]
-        nlo = csa.counts[c] + wm_rank(csa.wm, c, lo)
-        nhi = csa.counts[c] + wm_rank(csa.wm, c, hi)
+        # out-of-alphabet symbols cannot occur: collapse to the empty range
+        # at the symbol's lexicographic insertion point (0 below, n above),
+        # matching the host binary search's convention
+        c_ok = (c >= 0) & (c < csa.sigma)
+        cc = jnp.clip(c, 0, csa.sigma - 1)
+        oob = jnp.where(c < 0, 0, csa.n)
+        nlo = jnp.where(c_ok, csa.counts[cc] + wm_rank(csa.wm, cc, lo), oob)
+        nhi = jnp.where(c_ok, csa.counts[cc] + wm_rank(csa.wm, cc, hi), oob)
         lo = jnp.where(active, nlo, lo)
         hi = jnp.where(active, nhi, hi)
         return (lo, hi), None
@@ -132,6 +138,47 @@ def csa_search_batch(csa: CSA, patterns, lengths):
     return jax.vmap(lambda p, l: csa_search(csa, p, l))(
         as_i32(patterns), as_i32(lengths)
     )
+
+
+def csa_search_planned(csa: CSA, patterns, lengths, *, use_rank_kernel: bool = False):
+    """Backward search written batch-first for the serving planner.
+
+    Same integers as ``csa_search_batch``, but the scan carries [B] range
+    arrays and each step issues its two rank_c calls for the *whole batch*
+    at once — which lets ``use_rank_kernel=True`` route them through the
+    Pallas bitvector-rank kernel (repro.kernels.rank), one 2B-query stream
+    per wavelet level per symbol step.
+    """
+    from repro.succinct.wavelet import wm_rank_batch
+
+    patterns = as_i32(patterns)
+    lengths = as_i32(lengths)
+    B, max_m = patterns.shape
+    rows = jnp.arange(B, dtype=IDX)
+
+    def body(carry, t):
+        lo, hi = carry
+        j = lengths - 1 - t
+        active = (t < lengths) & (lo < hi)
+        c = patterns[rows, jnp.clip(j, 0, max_m - 1)]
+        # out-of-alphabet symbols cannot occur: collapse to the empty range
+        # at the symbol's lexicographic insertion point (0 below, n above),
+        # matching the host binary search's convention
+        c_ok = (c >= 0) & (c < csa.sigma)
+        cc = jnp.clip(c, 0, csa.sigma - 1)
+        oob = jnp.where(c < 0, 0, csa.n)
+        rlo = wm_rank_batch(csa.wm, cc, lo, use_kernel=use_rank_kernel)
+        rhi = wm_rank_batch(csa.wm, cc, hi, use_kernel=use_rank_kernel)
+        lo = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rlo, oob), lo)
+        hi = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rhi, oob), hi)
+        return (lo, hi), None
+
+    (lo, hi), _ = jax.lax.scan(
+        body,
+        (jnp.zeros(B, IDX), jnp.full(B, csa.n, IDX)),
+        jnp.arange(max_m, dtype=IDX),
+    )
+    return lo, jnp.maximum(lo, hi)
 
 
 # ---------------------------------------------------------------------------

@@ -225,6 +225,23 @@ def ilcp_list_docs_csa(index: ILCPIndex, csa: CSA, lo, hi, max_df: int):
     return ilcp_list_docs(index, lambda k: csa_da_at(csa, k), lo, hi, max_df)
 
 
+def ilcp_list_docs_da_batch(index: ILCPIndex, da: jnp.ndarray, lo, hi, max_df: int):
+    """Sada-I-D over a range batch (masked-query contract of
+    repro.core.listing): returns (docs int32[B, max_df] padded -1, count[B]).
+    Document ids are reported in *discovery* order — callers needing the
+    canonical sorted layout sort rows (repro.serve.retrieval does)."""
+    return jax.vmap(lambda a, b: ilcp_list_docs_da(index, da, a, b, max_df))(
+        as_i32(lo), as_i32(hi)
+    )
+
+
+def ilcp_list_docs_csa_batch(index: ILCPIndex, csa: CSA, lo, hi, max_df: int):
+    """Sada-I-L over a range batch; same contract as the -da variant."""
+    return jax.vmap(lambda a, b: ilcp_list_docs_csa(index, csa, a, b, max_df))(
+        as_i32(lo), as_i32(hi)
+    )
+
+
 # ---------------------------------------------------------------------------
 # Document counting (Fig 3)
 # ---------------------------------------------------------------------------

@@ -109,6 +109,37 @@ def brute_topk(docs, count, freqs, k: int):
 
 
 # ---------------------------------------------------------------------------
+# Fixed-shape batch entry points (vmapped, mask-friendly)
+# ---------------------------------------------------------------------------
+#
+# Contract shared by every *_batch executor in repro.core: inputs are dense
+# int32[B] range arrays where a *masked-out* query is the empty range
+# (lo, hi) = (0, 0); outputs are padded (B, max_df) doc arrays with -1
+# sentinels past the per-query count.  Empty ranges cost one bounded loop
+# iteration and report count 0, so a planner (repro.serve.planner) can hand
+# each engine the full batch with only its sub-batch live.
+
+
+def brute_list_da_batch(da: jnp.ndarray, lo, hi, max_occ: int, max_df: int):
+    """Brute-D over a range batch: (docs[B, max_df], count[B], freqs)."""
+    return jax.vmap(lambda a, b: brute_list_da(da, a, b, max_occ, max_df))(
+        as_i32(lo), as_i32(hi)
+    )
+
+
+def brute_list_csa_batch(csa: CSA, lo, hi, max_occ: int, max_df: int):
+    """Brute-L over a range batch: (docs[B, max_df], count[B], freqs)."""
+    return jax.vmap(lambda a, b: brute_list_csa(csa, a, b, max_occ, max_df))(
+        as_i32(lo), as_i32(hi)
+    )
+
+
+def brute_topk_batch(docs, counts, freqs, k: int):
+    """Row-wise top-k of brute_list_*_batch output: (docs[B, k], tf[B, k])."""
+    return jax.vmap(lambda d, c, f: brute_topk(d, c, f, k))(docs, counts, freqs)
+
+
+# ---------------------------------------------------------------------------
 # Sadakane's algorithm over the C array (Sada-C)
 # ---------------------------------------------------------------------------
 

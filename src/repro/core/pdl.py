@@ -41,7 +41,7 @@ from repro.core.csa import CSA, csa_lookup_batch
 from repro.core.listing import _distinct_from_window
 from repro.core.sufftree import lcp_interval_tree
 from repro.core.suffix import SuffixData
-from repro.grammar.repair import Grammar, modeled_bits_grammar, repair_compress_lists
+from repro.grammar.repair import repair_compress_lists
 
 
 @pytree_dataclass(
@@ -556,6 +556,38 @@ def pdl_doc_freqs(
     seg_docs = jnp.where(seg_valid, seg_docs, big)
     tf = jnp.where(seg_valid, tf, 0)
     return seg_docs, tf, nseg
+
+
+def pdl_list_docs_batch(
+    index: PDLIndex, csa: CSA, lo, hi, max_df: int, max_buf: int = 4096,
+    max_cover: int = 1024,
+):
+    """PDL listing over a range batch (masked-query contract of
+    repro.core.listing): (docs int32[B, max_df] sorted asc, -1 padded,
+    count[B])."""
+    return jax.vmap(
+        lambda a, b: pdl_list_docs(index, csa, a, b, max_df, max_buf, max_cover)
+    )(as_i32(lo), as_i32(hi))
+
+
+def pdl_doc_freqs_batch(
+    index: PDLIndex, csa: CSA, lo, hi, max_buf: int = 4096, max_cover: int = 1024,
+):
+    """Batched per-term (doc, tf) aggregation: (docs[B, max_buf] padded
+    INT32_MAX, tf[B, max_buf], ndocs[B])."""
+    return jax.vmap(
+        lambda a, b: pdl_doc_freqs(index, csa, a, b, max_buf, max_cover)
+    )(as_i32(lo), as_i32(hi))
+
+
+def pdl_topk_batch(
+    index: PDLIndex, csa: CSA, lo, hi, k: int, max_buf: int = 4096,
+    max_cover: int = 1024,
+):
+    """Batched top-k by (tf desc, id asc): (docs[B, k] padded -1, tf[B, k])."""
+    return jax.vmap(
+        lambda a, b: pdl_topk(index, csa, a, b, k, max_buf, max_cover)
+    )(as_i32(lo), as_i32(hi))
 
 
 def pdl_topk(

@@ -122,6 +122,24 @@ def tfidf_topk_batch(
     )(as_i32(ranges_batch), jnp.asarray(term_valid_batch, dtype=jnp.bool_))
 
 
+def term_ranges_batch(csa: CSA, patterns, lengths):
+    """Fused multi-term range finding for padded query batches.
+
+    patterns: int32[Q, T, max_m] (term-padded, query-padded); lengths:
+    int32[Q, T] with 0 marking absent term slots.  Returns
+    (ranges int32[Q, T, 2], valid bool[Q, T]) — the exact input layout of
+    ``tfidf_topk_batch`` — in one backward-search program (no host loop)."""
+    from repro.core.csa import csa_search_batch
+
+    patterns = as_i32(patterns)
+    lengths = as_i32(lengths)
+    Q, T, m = patterns.shape
+    lo, hi = csa_search_batch(csa, patterns.reshape(Q * T, m), lengths.reshape(-1))
+    hi = jnp.where(lengths.reshape(-1) > 0, hi, lo)
+    ranges = jnp.stack([lo, hi], axis=-1).reshape(Q, T, 2)
+    return ranges, lengths > 0
+
+
 # ---------------------------------------------------------------------------
 # The paper's incremental algorithm (Section 6.5 numbered loop)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,39 @@
+"""Distribution layer: mesh-axis policy, sharding rules, roofline accounting.
+
+``sharding`` owns every PartitionSpec decision in the repo (the cell
+registry, the optimizer's ZeRO layout, and the checkpoint restore path all
+defer to it); ``roofline`` turns compiled-HLO collective traffic plus the
+registry's analytic FLOP/byte models into the three roofline terms reported
+by the dry-run.
+"""
+
+from repro.dist.roofline import CollectiveStats, RooflineTerms, parse_collectives, roofline_terms
+from repro.dist.sharding import (
+    MeshAxes,
+    axes_for_mesh,
+    dp_size,
+    lm_batch_specs,
+    lm_cache_specs,
+    lm_param_specs,
+    nequip_batch_specs,
+    opt_state_specs,
+    recsys_param_specs,
+    zero_spec_for,
+)
+
+__all__ = [
+    "CollectiveStats",
+    "MeshAxes",
+    "RooflineTerms",
+    "axes_for_mesh",
+    "dp_size",
+    "lm_batch_specs",
+    "lm_cache_specs",
+    "lm_param_specs",
+    "nequip_batch_specs",
+    "opt_state_specs",
+    "parse_collectives",
+    "recsys_param_specs",
+    "roofline_terms",
+    "zero_spec_for",
+]

@@ -1,0 +1,143 @@
+"""Roofline accounting: HLO collective traffic + analytic FLOP/byte models.
+
+``parse_collectives`` scans compiled HLO text for communication ops and
+sizes them from their result shapes.  Under SPMD the printed shapes are
+already *per-device* shards, so the byte totals are per-chip wire traffic.
+Collectives inside non-entry computations (scan/while bodies) execute once
+per trip; the registry passes the trip count via ``scan_trips``.
+
+``roofline_terms`` combines the registry's analytic models with the parsed
+traffic into the three classic terms (compute, HBM, interconnect) on TPU
+v5e constants, and flags the dominant one.  These populate the dry-run
+JSONs consumed by benchmarks.roofline_report and gated by test_registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+# TPU v5e per-chip peaks (order-of-magnitude roofline constants, not
+# guarantees): 197 TFLOP/s bf16, 819 GB/s HBM, ~45 GB/s usable ICI per chip.
+PEAK_FLOPS = 1.97e14
+PEAK_HBM_BPS = 8.19e11
+PEAK_ICI_BPS = 4.5e10
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# `%name = f32[8,128]{1,0} all-reduce(...)` — also matches tuple-free starts
+_COLL_RE = re.compile(
+    r"=\s*\(?([a-z]+\d*)\[([\d,]*)\][^\s]*\s+("
+    + "|".join(k.replace("-", r"\-") for k in _COLL_KINDS)
+    + r")(?:-start|-done)?\("
+)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: dict
+    total_bytes: float
+    count: int
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    item = _DTYPE_BYTES.get(dtype, 4)
+    if not dims:
+        return float(item)
+    return float(math.prod(int(d) for d in dims.split(",") if d)) * item
+
+
+def parse_collectives(hlo_text: str, scan_trips: int = 1) -> CollectiveStats:
+    by_kind: dict = {}
+    count = 0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        # computation headers sit at column 0 and open a brace
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            in_entry = line.startswith("ENTRY")
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        # `-done` halves of async pairs carry the same shape; count starts only
+        if "-done(" in line:
+            continue
+        dtype, dims, kind = m.groups()
+        mult = 1 if in_entry else max(1, int(scan_trips))
+        by_kind[kind] = by_kind.get(kind, 0.0) + _shape_bytes(dtype, dims) * mult
+        count += mult
+    return CollectiveStats(
+        by_kind=by_kind, total_bytes=float(sum(by_kind.values())), count=count
+    )
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    analytic_flops: float
+    useful_ratio: float
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "analytic_flops": self.analytic_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def roofline_terms(
+    meta: dict,
+    chips: int,
+    collective_bytes: float,
+    raw_flops: float = 0.0,
+    raw_bytes: float = 0.0,
+) -> RooflineTerms:
+    """meta: the registry's analytic model (model/analytic flops+bytes).
+
+    raw_flops/raw_bytes come from XLA cost_analysis when available; the
+    larger of analytic vs raw is the conservative roofline input (the CPU
+    backend's cost analysis undercounts scan bodies, the analytic model can
+    miss fusion-added traffic).
+    """
+    chips = max(1, int(chips))
+    model_flops = float(meta.get("model_flops", 0.0))
+    flops = max(float(meta.get("analytic_flops", 0.0)), raw_flops)
+    bytes_ = max(float(meta.get("analytic_bytes", 0.0)), raw_bytes)
+
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_ / (chips * PEAK_HBM_BPS)
+    # parsed shapes are per-device shards already — no further division
+    collective_s = float(collective_bytes) / PEAK_ICI_BPS
+
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / flops if flops > 0 else 0.0
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        analytic_flops=flops,
+        useful_ratio=useful,
+    )

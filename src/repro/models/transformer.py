@@ -32,13 +32,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import apply_rope, rms_norm, softmax_xent, swiglu
+from repro.models.common import apply_rope, rms_norm, swiglu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -445,8 +445,10 @@ def _moe_ffn_ep(cfg: LMConfig, p, x, capacity_factor: float | None = None):
         aux = jax.lax.pmean(aux, dp + (mdl,))
         return y, aux
 
+    from repro.dist.sharding import shard_map_compat
+
     f_dp = dspec if cfg.ep_fsdp else None
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(

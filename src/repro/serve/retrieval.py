@@ -9,33 +9,182 @@ One service object owns the full index stack over a document collection:
     Sadakane (compressed variants)        document counting
     TF-IDF                                ranked multi-term AND/OR
 
-and exposes *batched, jitted* endpoints.  Queries arrive as padded pattern
-batches (the dense layout accelerators want); every endpoint is a single
-compiled program per (batch-shape, k) signature.
+Execution architecture — a three-stage on-device engine:
 
-The dispatch policy implements the paper's own recommendation (Section
-6.2.2): compute df cheaply first (Sada-S), compare with occ = hi - lo, and
-route to Brute-L when occ/df is small or the range is tiny, to the
-ILCP/PDL machinery otherwise.
+1. **Planner** (repro.serve.planner): one fused pass over the padded
+   pattern batch computes (lo, hi) ranges, df (Sada), occ, and a per-query
+   engine assignment as an int32 array.  This is the paper's Section 6.2.2
+   dispatch policy (Brute-L when occ/df is small, PDL otherwise) with the
+   branching moved from Python onto the device.
+2. **Masked batch executors** (repro.core.{listing,ilcp,pdl,tfidf}):
+   vmapped fixed-shape ``*_batch`` entry points.  Every engine runs over
+   the full batch with the queries not assigned to it collapsed to empty
+   ranges; outputs are padded (B, max_df) arrays with -1 sentinels, and the
+   final result is a ``jnp.where`` select by engine id.
+3. **Shape-bucketed compile cache** (this module): ``count``,
+   ``list_docs``, ``topk``, and ``tfidf`` each lower planner + executors to
+   ONE compiled program per (batch-bucket, length-bucket, k, max_df, ...)
+   signature.  Batch sizes round up to powers of two and pattern lengths to
+   multiples of 8, so recompilation is bounded regardless of traffic; the
+   AOT executables are compiled exactly once per bucket (``compile_counts``
+   exposes the tally for tests and monitoring).
+
+Engine mode is a *traced* input (an int code, -1 = auto), so switching
+between auto/brute/ilcp/pdl reuses the same executable.  The original
+per-query host loop survives as ``engine="reference"`` (optionally
+``"reference:brute"`` etc. to force a sub-engine) and is the parity oracle
+for the batched path — results are bit-identical by construction because
+both sides run the same per-query programs.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import functools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.csa import build_csa, csa_search_batch
-from repro.core.ilcp import build_ilcp, ilcp_count_docs_batch, ilcp_list_docs_da
-from repro.core.listing import brute_list_csa, brute_topk
-from repro.core.pdl import build_pdl, pdl_list_docs, pdl_topk
+from repro.common import IDX
+from repro.core.csa import build_csa
+from repro.core.ilcp import (
+    build_ilcp,
+    ilcp_count_docs_batch,
+    ilcp_list_docs_da,
+    ilcp_list_docs_da_batch,
+)
+from repro.core.listing import (
+    brute_list_csa,
+    brute_list_csa_batch,
+    brute_topk,
+    brute_topk_batch,
+)
+from repro.core.pdl import (
+    build_pdl,
+    pdl_list_docs,
+    pdl_list_docs_batch,
+    pdl_topk,
+    pdl_topk_batch,
+)
 from repro.core.sada import build_sada, sada_count_batch
 from repro.core.suffix import Collection, build_suffix_data
-from repro.core.tfidf import tfidf_topk_batch
+from repro.core.tfidf import term_ranges_batch, tfidf_topk_batch
 from repro.data.collections import pad_patterns
+from repro.serve.planner import (
+    ENGINE_BRUTE,
+    ENGINE_CODES,
+    ENGINE_EMPTY,
+    ENGINE_ILCP,
+    ENGINE_PDL,
+    masked_ranges,
+    plan_queries,
+)
+
+_BIG = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+
+def _bucket_batch(b: int) -> int:
+    """Round a batch size up to the next power of two (>= 1)."""
+    return 1 if b <= 1 else 1 << (b - 1).bit_length()
+
+
+def _bucket_len(m: int) -> int:
+    """Round a pattern length up to a multiple of 8 (>= 8)."""
+    return max(8, -(-m // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# Fused programs (pure functions of the index pytrees; compiled per bucket)
+# ---------------------------------------------------------------------------
+
+
+def _sorted_rows(docs):
+    """Canonical listing layout: ascending doc ids, -1 padding at the end."""
+    keys = jnp.where(docs < 0, _BIG, docs)
+    s = jnp.sort(keys, axis=1)
+    return jnp.where(s == _BIG, -1, s).astype(IDX)
+
+
+def _plan_program(use_rank_kernel, csa, sada, patterns, lengths, threshold, forced):
+    return plan_queries(
+        csa, sada, patterns, lengths, threshold, forced,
+        use_rank_kernel=use_rank_kernel,
+    )
+
+
+def _list_program(
+    max_df, max_buf, use_rank_kernel,
+    csa, ilcp, pdl, da, sada, patterns, lengths, threshold, forced,
+):
+    """list_docs as one program: plan, run all engines masked, select."""
+    plan = plan_queries(
+        csa, sada, patterns, lengths, threshold, forced,
+        use_rank_kernel=use_rank_kernel,
+    )
+    bl, bh = masked_ranges(plan, ENGINE_BRUTE)
+    docs_b, cnt_b, _ = brute_list_csa_batch(csa, bl, bh, max_buf, max_df)
+    il, ih = masked_ranges(plan, ENGINE_ILCP)
+    docs_i, cnt_i = ilcp_list_docs_da_batch(ilcp, da, il, ih, max_df)
+    pl, ph = masked_ranges(plan, ENGINE_PDL)
+    docs_p, cnt_p = pdl_list_docs_batch(pdl, csa, pl, ph, max_df, max_buf)
+
+    eng = plan.engine[:, None]
+    docs = jnp.where(
+        eng == ENGINE_BRUTE, docs_b,
+        jnp.where(eng == ENGINE_ILCP, docs_i, docs_p),
+    )
+    docs = jnp.where(eng == ENGINE_EMPTY, -1, docs)
+    cnt = jnp.where(
+        plan.engine == ENGINE_BRUTE, cnt_b,
+        jnp.where(plan.engine == ENGINE_ILCP, cnt_i, cnt_p),
+    )
+    cnt = jnp.where(plan.engine == ENGINE_EMPTY, 0, cnt).astype(IDX)
+    return _sorted_rows(docs), cnt, plan
+
+
+def _topk_program(
+    k, max_df, max_buf, use_rank_kernel,
+    csa, pdl_t, sada, patterns, lengths, threshold, forced,
+):
+    """top-k as one program.  Brute-assigned queries take the sorted-window
+    path (exact tf within the occ window); ILCP has no top-k structure, so
+    its queries ride the PDL lists, as in the paper's Section 6.3 lineup."""
+    plan = plan_queries(
+        csa, sada, patterns, lengths, threshold, forced,
+        use_rank_kernel=use_rank_kernel,
+    )
+    bl, bh = masked_ranges(plan, ENGINE_BRUTE)
+    d_b, c_b, f_b = brute_list_csa_batch(csa, bl, bh, max_buf, max_df)
+    tb_docs, tb_tf = brute_topk_batch(d_b, c_b, f_b, k)
+
+    use_pdl = (plan.engine == ENGINE_PDL) | (plan.engine == ENGINE_ILCP)
+    pl = jnp.where(use_pdl, plan.lo, 0)
+    ph = jnp.where(use_pdl, plan.hi, 0)
+    tp_docs, tp_tf = pdl_topk_batch(pdl_t, csa, pl, ph, k, max_buf)
+
+    is_brute = (plan.engine == ENGINE_BRUTE)[:, None]
+    docs = jnp.where(is_brute, tb_docs, tp_docs)
+    tfs = jnp.where(is_brute, tb_tf, tp_tf)
+    empty = (plan.engine == ENGINE_EMPTY)[:, None]
+    return jnp.where(empty, -1, docs), jnp.where(empty, 0, tfs), plan
+
+
+def _tfidf_program(
+    k, conjunctive, max_buf,
+    csa, pdl_t, sada, patterns, lengths,
+):
+    """Multi-term ranked query as one program: fused term range search +
+    batched ranked-AND/OR scoring."""
+    ranges, valid = term_ranges_batch(csa, patterns, lengths)
+    return tfidf_topk_batch(
+        pdl_t, csa, sada, ranges, valid, k, conjunctive, max_buf=max_buf
+    )
 
 
 @dataclasses.dataclass
@@ -48,6 +197,9 @@ class RetrievalService:
     sada: object
     da: object
     occ_df_threshold: float = 4.0     # paper: brute wins when occ/df < ~4
+    use_rank_kernel: bool = False     # Pallas rank in the planner (TPU path)
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    compile_counts: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # -- construction --------------------------------------------------------
 
@@ -55,8 +207,11 @@ class RetrievalService:
     def build(
         cls, coll: Collection, block_size: int = 64, beta: float = 16.0,
         sada_variant: str = "sparse", sample_rate: int = 16,
+        use_rank_kernel: bool | None = None,
     ):
         data = build_suffix_data(coll)
+        if use_rank_kernel is None:
+            use_rank_kernel = jax.default_backend() == "tpu"
         return cls(
             coll=coll,
             csa=build_csa(data, sample_rate=sample_rate),
@@ -65,19 +220,65 @@ class RetrievalService:
             pdl_topk=build_pdl(data, block_size=block_size, beta=None, mode="topk"),
             sada=build_sada(data, sada_variant),
             da=jnp.asarray(data.da),
+            use_rank_kernel=use_rank_kernel,
         )
 
-    # -- endpoints ------------------------------------------------------------
+    # -- compile cache -------------------------------------------------------
+
+    def _compiled(self, kind: str, statics: tuple, build_fn, args: tuple):
+        """One AOT executable per (kind, statics) bucket.  The executable is
+        lowered and compiled exactly once; subsequent calls with any batch
+        that pads into the same bucket reuse it with zero retracing."""
+        key = (kind, statics)
+        exe = self._cache.get(key)
+        if exe is None:
+            exe = jax.jit(build_fn()).lower(*args).compile()
+            self._cache[key] = exe
+            self.compile_counts[kind] = self.compile_counts.get(kind, 0) + 1
+        return exe
+
+    def _pad_batch(self, patterns):
+        """Dense [B_bucket, m_bucket] pattern batch + lengths + true size."""
+        pats, lens = pad_patterns(patterns)
+        B, m = pats.shape
+        Bb, mb = _bucket_batch(B), _bucket_len(m)
+        out = np.zeros((Bb, mb), np.int32)
+        out[:B, :m] = pats
+        lns = np.zeros(Bb, np.int32)
+        lns[:B] = lens
+        return jnp.asarray(out), jnp.asarray(lns), B
+
+    def _knobs(self, engine: str):
+        thresh = jnp.float32(self.occ_df_threshold)
+        forced = jnp.int32(ENGINE_CODES[engine])
+        return thresh, forced
+
+    # -- planned endpoints (single compiled program per shape bucket) --------
+
+    def plan(self, patterns, engine: str = "auto"):
+        """Query plan for a pattern batch: host arrays (lo, hi, occ, df,
+        engine), trimmed to the true batch size."""
+        pats, lens, B = self._pad_batch(patterns)
+        thresh, forced = self._knobs(engine)
+        exe = self._compiled(
+            "plan", (pats.shape,),
+            lambda: functools.partial(_plan_program, self.use_rank_kernel),
+            (self.csa, self.sada, pats, lens, thresh, forced),
+        )
+        plan = exe(self.csa, self.sada, pats, lens, thresh, forced)
+        return {
+            name: np.asarray(getattr(plan, name))[:B]
+            for name in ("lo", "hi", "occ", "df", "engine")
+        }
 
     def ranges(self, patterns):
-        pats, lens = pad_patterns(patterns)
-        lo, hi = csa_search_batch(self.csa, jnp.asarray(pats), jnp.asarray(lens))
-        return np.asarray(lo), np.asarray(hi), np.asarray(lens)
+        p = self.plan(patterns)
+        lens = np.asarray([len(x) for x in patterns], np.int32)
+        return p["lo"], p["hi"], lens
 
     def count(self, patterns):
         """df per pattern (Sada variant; ILCP counting cross-checks)."""
-        lo, hi, lens = self.ranges(patterns)
-        return np.asarray(sada_count_batch(self.sada, jnp.asarray(lo), jnp.asarray(hi)))
+        return self.plan(patterns)["df"]
 
     def count_ilcp(self, patterns):
         lo, hi, lens = self.ranges(patterns)
@@ -87,25 +288,144 @@ class RetrievalService:
             )
         )
 
+    def list_docs_arrays(self, patterns, max_df: int = 256, engine: str = "auto",
+                         max_buf: int = 4096):
+        """Array-level listing endpoint: (docs int32[B, max_df] ascending,
+        -1 padded, counts int32[B]) — the zero-copy serving layout."""
+        if not len(patterns):
+            return np.zeros((0, max_df), np.int32), np.zeros(0, np.int32)
+        pats, lens, B = self._pad_batch(patterns)
+        thresh, forced = self._knobs(engine)
+        args = (self.csa, self.ilcp, self.pdl_list, self.da, self.sada,
+                pats, lens, thresh, forced)
+        exe = self._compiled(
+            "list", (pats.shape, max_df, max_buf),
+            lambda: functools.partial(
+                _list_program, max_df, max_buf, self.use_rank_kernel
+            ),
+            args,
+        )
+        docs, cnt, _plan = exe(*args)
+        return np.asarray(docs)[:B], np.asarray(cnt)[:B]
+
     def list_docs(self, patterns, max_df: int = 256, engine: str = "auto",
                   max_buf: int = 4096):
-        """Document listing with the paper's df/occ dispatch policy."""
-        lo, hi, lens = self.ranges(patterns)
-        dfs = np.asarray(sada_count_batch(self.sada, jnp.asarray(lo), jnp.asarray(hi)))
+        """Document listing with the paper's df/occ dispatch policy.
+
+        ``engine``: "auto" | "brute" | "ilcp" | "pdl" run on the batched
+        engine; "reference" (or "reference:<engine>") runs the per-query
+        host loop — the parity oracle."""
+        if engine.startswith("reference"):
+            sub = engine.split(":", 1)[1] if ":" in engine else "auto"
+            return self._list_docs_reference(patterns, max_df, sub, max_buf)
+        docs, cnt = self.list_docs_arrays(patterns, max_df, engine, max_buf)
+        return [docs[i, : cnt[i]].tolist() for i in range(len(cnt))]
+
+    def topk_arrays(self, patterns, k: int = 10, engine: str = "auto",
+                    max_buf: int = 4096):
+        """Array-level top-k endpoint: (docs int32[B, k] padded -1,
+        tf int32[B, k]), ranked by (tf desc, id asc)."""
+        if not len(patterns):
+            return np.zeros((0, k), np.int32), np.zeros((0, k), np.int32)
+        pats, lens, B = self._pad_batch(patterns)
+        thresh, forced = self._knobs(engine)
+        max_df = self._topk_max_df(max_buf)
+        args = (self.csa, self.pdl_topk, self.sada, pats, lens, thresh, forced)
+        exe = self._compiled(
+            "topk", (pats.shape, k, max_df, max_buf),
+            lambda: functools.partial(
+                _topk_program, k, max_df, max_buf, self.use_rank_kernel
+            ),
+            args,
+        )
+        docs, tfs, _plan = exe(*args)
+        return np.asarray(docs)[:B], np.asarray(tfs)[:B]
+
+    def topk(self, patterns, k: int = 10, engine: str = "auto",
+             max_buf: int = 4096):
+        if engine.startswith("reference"):
+            sub = engine.split(":", 1)[1] if ":" in engine else "auto"
+            return self._topk_reference(patterns, k, sub, max_buf)
+        docs, tfs = self.topk_arrays(patterns, k, engine, max_buf)
+        return [
+            [(int(d), int(t)) for d, t in zip(docs[i], tfs[i]) if d >= 0]
+            for i in range(docs.shape[0])
+        ]
+
+    def tfidf_arrays(self, queries, k: int = 10, conjunctive: bool = False,
+                     max_terms: int = 4, max_buf: int = 2048):
+        """Array-level ranked multi-term endpoint: (docs int32[Q, k] padded
+        -1, scores f32[Q, k])."""
+        Q = len(queries)
+        if Q == 0:
+            return np.zeros((0, k), np.int32), np.zeros((0, k), np.float32)
+        m = max(
+            (len(t) for terms in queries for t in terms[:max_terms]), default=1
+        )
+        Qb, mb = _bucket_batch(Q), _bucket_len(m)
+        pats = np.zeros((Qb, max_terms, mb), np.int32)
+        lens = np.zeros((Qb, max_terms), np.int32)
+        for qi, terms in enumerate(queries):
+            for ti, t in enumerate(terms[:max_terms]):
+                t = np.asarray(t, np.int32)[:mb]
+                pats[qi, ti, : len(t)] = t
+                lens[qi, ti] = len(t)
+        pats = jnp.asarray(pats)
+        lens = jnp.asarray(lens)
+        args = (self.csa, self.pdl_topk, self.sada, pats, lens)
+        exe = self._compiled(
+            "tfidf", (pats.shape, k, conjunctive, max_buf),
+            lambda: functools.partial(_tfidf_program, k, conjunctive, max_buf),
+            args,
+        )
+        docs, scores = exe(*args)
+        return np.asarray(docs)[:Q], np.asarray(scores)[:Q]
+
+    def tfidf(self, queries, k: int = 10, conjunctive: bool = False,
+              max_terms: int = 4, max_buf: int = 2048, engine: str = "auto"):
+        """queries: list of term-pattern lists.  Returns ranked (doc, score)."""
+        if engine.startswith("reference"):
+            return self._tfidf_reference(queries, k, conjunctive, max_terms, max_buf)
+        docs, scores = self.tfidf_arrays(queries, k, conjunctive, max_terms, max_buf)
+        return [
+            [(int(d), float(s)) for d, s in zip(docs[i], scores[i]) if d >= 0]
+            for i in range(docs.shape[0])
+        ]
+
+    # -- reference per-query path (parity oracle) ----------------------------
+
+    def _dispatch(self, occ: int, df: int, engine: str) -> str:
+        if engine != "auto":
+            return engine
+        return "brute" if occ < self.occ_df_threshold * max(df, 1) else "pdl"
+
+    def _ranges_dfs(self, patterns):
+        pats, lens = pad_patterns(patterns)
+        from repro.core.csa import csa_search_batch
+
+        lo, hi = csa_search_batch(self.csa, jnp.asarray(pats), jnp.asarray(lens))
+        # same contract as the planner: zero-length patterns are empty, not
+        # the full range (keeps reference/batched parity bit-exact)
+        hi = jnp.where(jnp.asarray(lens) > 0, hi, lo)
+        dfs = sada_count_batch(self.sada, lo, hi)
+        return np.asarray(lo), np.asarray(hi), np.asarray(dfs)
+
+    def _list_docs_reference(self, patterns, max_df, engine, max_buf):
+        if not len(patterns):
+            return []
+        lo, hi, dfs = self._ranges_dfs(patterns)
         out = []
         for qi in range(len(lo)):
             l, h = int(lo[qi]), int(hi[qi])
             if l >= h:
                 out.append([])
                 continue
-            occ = h - l
-            df = max(int(dfs[qi]), 1)
-            eng = engine
-            if engine == "auto":
-                eng = "brute" if occ / df < self.occ_df_threshold else "pdl"
+            eng = self._dispatch(h - l, int(dfs[qi]), engine)
             if eng == "brute":
+                # window min(occ, max_buf) covers the same positions as the
+                # batched executor's fixed max_buf window (validity-masked)
                 docs, cnt, _ = brute_list_csa(
-                    self.csa, l, h, max_occ=min(occ, max_buf), max_df=max_df
+                    self.csa, l, h, min(h - l, max_buf), max_df
                 )
             elif eng == "ilcp":
                 docs, cnt = ilcp_list_docs_da(self.ilcp, self.da, l, h, max_df)
@@ -116,29 +436,43 @@ class RetrievalService:
             out.append(sorted(np.asarray(docs)[: int(cnt)].tolist()))
         return out
 
-    def topk(self, patterns, k: int = 10, max_buf: int = 4096):
-        lo, hi, lens = self.ranges(patterns)
+    def _topk_max_df(self, max_buf: int) -> int:
+        return min(self.coll.d + 1, max_buf)
+
+    def _topk_reference(self, patterns, k, engine, max_buf):
+        if not len(patterns):
+            return []
+        lo, hi, dfs = self._ranges_dfs(patterns)
+        max_df = self._topk_max_df(max_buf)
         out = []
         for qi in range(len(lo)):
             l, h = int(lo[qi]), int(hi[qi])
             if l >= h:
                 out.append([])
                 continue
-            docs, tfs = pdl_topk(self.pdl_topk, self.csa, l, h, k, max_buf=max_buf)
+            eng = self._dispatch(h - l, int(dfs[qi]), engine)
+            if eng == "brute":
+                d, c, f = brute_list_csa(
+                    self.csa, l, h, min(h - l, max_buf), max_df
+                )
+                docs, tfs = brute_topk(d, c, f, k)
+            else:
+                docs, tfs = pdl_topk(self.pdl_topk, self.csa, l, h, k,
+                                     max_buf=max_buf)
             out.append(
                 [(int(d), int(t)) for d, t in zip(np.asarray(docs), np.asarray(tfs))
                  if d >= 0]
             )
         return out
 
-    def tfidf(self, queries, k: int = 10, conjunctive: bool = False,
-              max_terms: int = 4, max_buf: int = 2048):
-        """queries: list of term-pattern lists.  Returns ranked (doc, score)."""
+    def _tfidf_reference(self, queries, k, conjunctive, max_terms, max_buf):
         Q = len(queries)
         ranges = np.zeros((Q, max_terms, 2), np.int32)
         valid = np.zeros((Q, max_terms), bool)
         for qi, terms in enumerate(queries):
-            lo, hi, _ = self.ranges(terms[:max_terms])
+            if not terms:
+                continue
+            lo, hi, _ = self._ranges_dfs(terms[:max_terms])
             for ti in range(len(lo)):
                 ranges[qi, ti] = (lo[ti], hi[ti])
                 valid[qi, ti] = True

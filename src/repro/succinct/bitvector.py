@@ -30,7 +30,6 @@ the execution-model change recorded in DESIGN.md Section 2.
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.common import (

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import IDX, as_i32, ceil_log2, pytree_dataclass
-from repro.succinct.bitvector import PlainBitvector, plain_from_bits
+from repro.succinct.bitvector import plain_from_bits
 
 
 @pytree_dataclass(meta=("n", "sigma", "levels"))
@@ -100,6 +100,52 @@ def wm_rank(wm: WaveletMatrix, c, i):
         return (lo, hi)
 
     lo, hi = jax.lax.fori_loop(0, wm.levels, body, (as_i32(0), as_i32(i)))
+    return (hi - lo).astype(IDX)
+
+
+def wm_rank_batch(wm: WaveletMatrix, c, i, *, use_kernel: bool = False,
+                  block_q: int = 1024):
+    """Batched rank_c over int32[B] symbol/position arrays.
+
+    With ``use_kernel=False`` this is ``wm_rank`` elementwise (every op in
+    the descent is already dense).  With ``use_kernel=True`` each level's
+    two prefix ranks go through the Pallas bitvector-rank kernel
+    (repro.kernels.rank) as one fused 2B-query stream per level — the TPU
+    hot path for the serving planner's range search.  Both paths compute
+    the identical integers."""
+    c = as_i32(c)
+    i = as_i32(i)
+    B = i.shape[0]
+
+    if use_kernel:
+        from repro.kernels.ops import rank as rank_kernel
+
+        def body(lvl, carry):
+            lo, hi = carry
+            bit = (c >> (wm.levels - 1 - lvl)) & 1
+            z = wm.zcount[lvl]
+            r1 = rank_kernel(
+                wm.words[lvl], wm.ones_prefix[lvl], jnp.concatenate([lo, hi]),
+                block_q=block_q,
+            )
+            lo = jnp.where(bit == 0, lo - r1[:B], z + r1[:B])
+            hi = jnp.where(bit == 0, hi - r1[B:], z + r1[B:])
+            return (lo, hi)
+
+    else:
+
+        def body(lvl, carry):
+            lo, hi = carry
+            bit = (c >> (wm.levels - 1 - lvl)) & 1
+            z = wm.zcount[lvl]
+            lo0, hi0 = wm._rank0_level(lvl, lo), wm._rank0_level(lvl, hi)
+            lo = jnp.where(bit == 0, lo0, z + (lo - lo0))
+            hi = jnp.where(bit == 0, hi0, z + (hi - hi0))
+            return (lo, hi)
+
+    lo, hi = jax.lax.fori_loop(
+        0, wm.levels, body, (jnp.zeros(B, IDX), as_i32(i))
+    )
     return (hi - lo).astype(IDX)
 
 

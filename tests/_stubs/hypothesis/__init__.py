@@ -1,0 +1,66 @@
+"""Minimal ``hypothesis`` shim for environments without the real package.
+
+Implements exactly the surface the test-suite uses — ``given``, ``settings``,
+``strategies.{integers,lists,text,sampled_from,booleans,data}`` — as a
+seeded randomized-example runner.  Examples are drawn from a deterministic
+per-test RNG, so runs are reproducible; there is no shrinking or database.
+tests/conftest.py only puts this package on sys.path when the real
+hypothesis is not installed.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kwstrats):
+    def deco(fn):
+        # positional strategies fill the LAST parameters (hypothesis
+        # semantics), so bind them by name — fixtures keep the front slots
+        fn_params = [p.name for p in inspect.signature(fn).parameters.values()]
+        strat_names = fn_params[len(fn_params) - len(strats):] if strats else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"hyp:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in zip(strat_names, strats)}
+                drawn.update((k, s.example(rng)) for k, s in kwstrats.items())
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 - re-raise with example
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}"
+                    ) from e
+            return None
+
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution: positional strategies fill the *last* len(strats)
+        # parameters, keyword strategies fill by name
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if strats:
+            params = params[: len(params) - len(strats)]
+        params = [p for p in params if p.name not in kwstrats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__  # keep pytest off the original signature
+        return wrapper
+
+    return deco

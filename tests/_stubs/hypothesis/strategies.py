@@ -1,0 +1,87 @@
+"""Strategy objects for the hypothesis shim: seeded random example drawing.
+
+Each strategy exposes ``example(rng)``; composite strategies recurse.  The
+``data()`` strategy mirrors hypothesis' interactive draws by handing the
+test a ``DataObject`` bound to the per-example RNG.
+"""
+
+from __future__ import annotations
+
+import string
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, name="strategy"):
+        self._draw = draw_fn
+        self._name = name
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self._draw(rng)), f"{self._name}.map")
+
+    def filter(self, pred, max_tries: int = 100):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise AssertionError(f"filter on {self._name} found no example")
+
+        return SearchStrategy(draw, f"{self._name}.filter")
+
+    def __repr__(self):
+        return self._name
+
+
+def integers(min_value: int = -(2**31), max_value: int = 2**31 - 1):
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))], "sampled_from")
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int | None = None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        size = rng.randint(min_size, hi)
+        return [elements.example(rng) for _ in range(size)]
+
+    return SearchStrategy(draw, f"lists(..., {min_size}, {hi})")
+
+
+def text(
+    alphabet: str = string.ascii_lowercase, min_size: int = 0,
+    max_size: int | None = None,
+):
+    chars = list(alphabet)
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        size = rng.randint(min_size, hi)
+        return "".join(chars[rng.randrange(len(chars))] for _ in range(size))
+
+    return SearchStrategy(draw, f"text({min_size}, {hi})")
+
+
+class DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.example(self._rng)
+
+
+def data():
+    return SearchStrategy(lambda rng: DataObject(rng), "data()")

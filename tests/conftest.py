@@ -1,0 +1,15 @@
+"""Test bootstrap: gate optional third-party test deps.
+
+The property-based suites use ``hypothesis``; this container image does not
+ship it and nothing may be pip-installed here.  When the real package is
+absent, a minimal API-compatible shim (tests/_stubs/hypothesis) is put on
+sys.path so the suites still collect and run as seeded randomized tests.
+With hypothesis installed (e.g. in CI) the shim is never imported.
+"""
+
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))

@@ -3,7 +3,6 @@
 and several (b, beta) settings)."""
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -8,7 +8,6 @@ normal test run without 512 virtual devices.
 """
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

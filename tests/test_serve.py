@@ -1,7 +1,6 @@
 """End-to-end tests of the RetrievalService (the paper's indexes behind the
 batched serving API) — all engines agree with brute-force oracles."""
 
-import numpy as np
 import pytest
 
 from repro.data.collections import SyntheticSpec, generate, random_substring_patterns

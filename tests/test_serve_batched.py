@@ -1,0 +1,180 @@
+"""Batched query-engine tests: the planned, masked, jit-compiled pipeline
+must be bit-identical to the ``engine="reference"`` per-query path on
+randomized repetitive collections, and the shape-bucketing cache must
+compile at most once per bucket."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.data.collections import SyntheticSpec, generate, random_substring_patterns
+from repro.serve.planner import (
+    ENGINE_BRUTE,
+    ENGINE_EMPTY,
+    ENGINE_ILCP,
+    ENGINE_PDL,
+)
+from repro.serve.retrieval import RetrievalService
+
+MAX_BUF = 512
+
+SPECS = {
+    "version": SyntheticSpec("version", n_base=3, n_variants=7, base_len=90,
+                             mutation_rate=0.01, seed=5),
+    "dna": SyntheticSpec("dna", n_base=1, n_variants=16, base_len=150,
+                         mutation_rate=0.003, seed=9),
+}
+
+
+@pytest.fixture(scope="module", params=list(SPECS))
+def svc_pats(request):
+    coll = generate(SPECS[request.param])
+    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    pats = random_substring_patterns(coll, 300, 5, 24)
+    assert pats, "workload generation produced no patterns"
+    return svc, pats
+
+
+# ---------------------------------------------------------------------------
+# Parity: batched pipeline == reference per-query path, all engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["auto", "brute", "ilcp", "pdl"])
+def test_list_docs_parity(svc_pats, engine):
+    svc, pats = svc_pats
+    got = svc.list_docs(pats[:10], max_df=64, engine=engine, max_buf=MAX_BUF)
+    ref = svc.list_docs(
+        pats[:10], max_df=64, engine=f"reference:{engine}", max_buf=MAX_BUF
+    )
+    assert got == ref
+
+
+@pytest.mark.parametrize("engine", ["auto", "brute", "pdl"])
+def test_topk_parity(svc_pats, engine):
+    svc, pats = svc_pats
+    got = svc.topk(pats[:10], k=5, engine=engine, max_buf=MAX_BUF)
+    ref = svc.topk(pats[:10], k=5, engine=f"reference:{engine}", max_buf=MAX_BUF)
+    assert got == ref
+
+
+@pytest.mark.parametrize("conjunctive", [False, True])
+def test_tfidf_parity(svc_pats, conjunctive):
+    svc, pats = svc_pats
+    queries = [[pats[0], pats[1]], [pats[2]], [pats[3], pats[0], pats[2]]]
+    got = svc.tfidf(queries, k=5, conjunctive=conjunctive, max_buf=MAX_BUF)
+    ref = svc.tfidf(
+        queries, k=5, conjunctive=conjunctive, max_buf=MAX_BUF,
+        engine="reference",
+    )
+    assert got == ref
+
+
+def test_missing_pattern_is_empty(svc_pats):
+    svc, pats = svc_pats
+    # a symbol outside the collection alphabet never occurs; a zero-length
+    # pattern is empty by the serving contract (not the full range)
+    bogus = np.full(6, svc.coll.sigma + 3, np.int32)
+    empty = np.zeros(0, np.int32)
+    batch = [pats[0], bogus, pats[1], empty]
+    got = svc.list_docs(batch, max_df=32, max_buf=MAX_BUF)
+    ref = svc.list_docs(batch, max_df=32, engine="reference", max_buf=MAX_BUF)
+    assert got == ref
+    assert got[1] == [] and got[3] == []
+    assert svc.topk(batch, k=3, max_buf=MAX_BUF)[1] == []
+    assert int(svc.count(batch)[1]) == 0 and int(svc.count(batch)[3]) == 0
+
+
+def test_plan_engine_assignment(svc_pats):
+    svc, pats = svc_pats
+    plan = svc.plan(pats[:12])
+    assert set(plan["engine"]).issubset(
+        {ENGINE_EMPTY, ENGINE_BRUTE, ENGINE_ILCP, ENGINE_PDL}
+    )
+    nonempty = plan["occ"] > 0
+    # auto never assigns ILCP (the paper's recommendation is brute-vs-PDL)
+    assert np.all(np.isin(plan["engine"][nonempty], [ENGINE_BRUTE, ENGINE_PDL]))
+    forced = svc.plan(pats[:12], engine="ilcp")
+    assert np.all(forced["engine"][nonempty] == ENGINE_ILCP)
+    # the policy itself: occ < threshold * df -> brute
+    occ, df = plan["occ"][nonempty], np.maximum(plan["df"][nonempty], 1)
+    want = np.where(occ < svc.occ_df_threshold * df, ENGINE_BRUTE, ENGINE_PDL)
+    assert np.array_equal(plan["engine"][nonempty], want)
+
+
+def test_count_matches_truth(svc_pats):
+    svc, pats = svc_pats
+    from repro.core.suffix import build_suffix_data, sa_range_for_pattern
+
+    data = build_suffix_data(svc.coll)
+    got = svc.count(pats[:12])
+    for i, p in enumerate(pats[:12]):
+        lo, hi = sa_range_for_pattern(data, p)
+        assert int(got[i]) == len(set(data.da[lo:hi].tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketing compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_one_compile_per_bucket():
+    coll = generate(
+        SyntheticSpec("version", n_base=2, n_variants=5, base_len=80,
+                      mutation_rate=0.01, seed=11)
+    )
+    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    pats = random_substring_patterns(coll, 200, 5, 16)
+    assert len(pats) >= 9
+
+    compile_events = []
+    recording = []
+    jax.monitoring.register_event_listener(
+        lambda name, **kw: compile_events.append(name)
+        if recording and "compile" in name
+        else None
+    )
+
+    # batch sizes 5 and 7 land in the same power-of-two bucket (8)
+    svc.list_docs(pats[:5], max_df=32, max_buf=MAX_BUF)
+    assert svc.compile_counts["list"] == 1
+
+    recording.append(True)  # arm the listener: bucket is warm now
+    out7 = svc.list_docs(pats[:7], max_df=32, max_buf=MAX_BUF)
+    out5 = svc.list_docs(pats[:5], max_df=32, engine="pdl", max_buf=MAX_BUF)
+    recording.clear()
+
+    assert svc.compile_counts["list"] == 1, "same bucket must not recompile"
+    assert not compile_events, f"hot path triggered XLA compiles: {compile_events}"
+    assert len(out7) == 7 and len(out5) == 5
+
+    # a new bucket (16) compiles exactly once more
+    svc.list_docs(pats[:9], max_df=32, max_buf=MAX_BUF)
+    assert svc.compile_counts["list"] == 2
+    svc.list_docs(pats[:16], max_df=32, max_buf=MAX_BUF)
+    assert svc.compile_counts["list"] == 2
+
+    # engine mode is traced, not static: no recompile across engines
+    for engine in ("auto", "brute", "ilcp", "pdl"):
+        svc.list_docs(pats[:7], max_df=32, engine=engine, max_buf=MAX_BUF)
+    assert svc.compile_counts["list"] == 2
+
+    # other endpoints keep their own per-bucket tally
+    svc.topk(pats[:5], k=3, max_buf=MAX_BUF)
+    svc.topk(pats[:8], k=3, max_buf=MAX_BUF)
+    assert svc.compile_counts["topk"] == 1
+    svc.tfidf([[pats[0], pats[1]]], k=3, max_buf=MAX_BUF)
+    svc.tfidf([[pats[2]]], k=3, max_buf=MAX_BUF)
+    assert svc.compile_counts["tfidf"] == 1
+
+
+def test_empty_batch():
+    coll = generate(
+        SyntheticSpec("version", n_base=2, n_variants=4, base_len=60,
+                      mutation_rate=0.01, seed=3)
+    )
+    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    assert svc.list_docs([]) == []
+    assert svc.topk([]) == []
+    assert svc.tfidf([]) == []
+    assert svc.count([]).shape == (0,)

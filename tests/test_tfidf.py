@@ -1,7 +1,6 @@
 """TF-IDF ranked multi-term queries vs a brute-force oracle."""
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro.core.suffix import (

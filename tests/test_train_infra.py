@@ -7,7 +7,6 @@ import os
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.models.transformer import LMConfig, forward_train, init_params
 from repro.train.checkpoint import (

@@ -3,8 +3,6 @@
 from collections import Counter
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
