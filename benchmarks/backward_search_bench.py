@@ -1,0 +1,148 @@
+"""Backward-search microbenchmark: launch counts + planner-stage latency.
+
+Compares the three execution paths of the planned CSA range search at
+batch sizes {1, 16, 128}:
+
+  legacy-dual-descent  csa_search_batch — vmapped per-query scan, two
+                       independent wavelet descents per symbol step
+                       (4 rank gathers per level)
+  xla-pair-descent     csa_search_planned(use_kernel=False) — batch-first
+                       scan, both SA-range boundaries on ONE descent
+                       (2 rank gathers per level)
+  pallas-kernel        csa_search_planned(use_kernel=True) — the fused
+                       kernel: the whole batched search in ONE pallas_call
+                       (interpret mode on this CPU container)
+
+Beyond wall time, the bench *counts* the structural contract in each
+variant's jaxpr: pallas_call launches per batch (1 on the kernel path,
+0 elsewhere — down from the 2*m*levels rank calls a per-rank kernel would
+issue) and gather equations (the pair descent halves the legacy count).
+The planner stage (plan_queries: search + df + occ + dispatch) is timed on
+both the kernel and fallback paths, since that is the serving-layer stage
+the fusion targets.
+
+    PYTHONPATH=src python -m benchmarks.backward_search_bench \
+        [--out experiments/BENCH_backward_search.json] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_collections, emit, time_batched
+from repro.core.csa import build_csa, csa_search_batch, csa_search_planned
+from repro.core.sada import build_sada
+from repro.core.suffix import build_suffix_data
+from repro.data.collections import pad_patterns, random_substring_patterns
+from repro.serve.planner import plan_queries
+
+BATCH_SIZES = (1, 16, 128)
+
+
+def count_eqns(jaxpr, name: str) -> int:
+    total = sum(1 for eqn in jaxpr.eqns if eqn.primitive.name == name)
+    for sub in jax.core.subjaxprs(jaxpr):
+        total += count_eqns(sub, name)
+    return total
+
+
+def _workload(coll, B: int, rng):
+    pats = random_substring_patterns(coll, max(2 * B, 16), 4, 24)
+    idx = rng.integers(0, len(pats), B)
+    arr, lens = pad_patterns([pats[i] for i in idx])
+    return jnp.asarray(arr), jnp.asarray(lens)
+
+
+def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
+        iters: int = 5, out: str | None = None):
+    rows, results = [], []
+    for name in collections:
+        coll = bench_collections()[name]
+        data = build_suffix_data(coll)
+        csa = build_csa(data)
+        sada = build_sada(data, "sparse")
+        rng = np.random.default_rng(0)
+
+        search_variants = {
+            "legacy-dual-descent": jax.jit(
+                lambda p, l: csa_search_batch(csa, p, l)
+            ),
+            "xla-pair-descent": jax.jit(
+                lambda p, l: csa_search_planned(csa, p, l, use_kernel=False)
+            ),
+            "pallas-kernel": jax.jit(
+                lambda p, l: csa_search_planned(csa, p, l, use_kernel=True)
+            ),
+        }
+        plan_variants = {
+            "plan-fallback": jax.jit(
+                lambda p, l: plan_queries(csa, sada, p, l, 4.0, -1,
+                                          use_kernel=False)
+            ),
+            "plan-kernel": jax.jit(
+                lambda p, l: plan_queries(csa, sada, p, l, 4.0, -1,
+                                          use_kernel=True)
+            ),
+        }
+
+        for B in batch_sizes:
+            pats, lens = _workload(coll, B, rng)
+            for variant, fn in {**search_variants, **plan_variants}.items():
+                closed = jax.make_jaxpr(fn)(pats, lens)
+                launches = count_eqns(closed.jaxpr, "pallas_call")
+                gathers = count_eqns(closed.jaxpr, "gather")
+                med, got = time_batched(fn, pats, lens, iters=iters)
+                # every variant must agree on the integers
+                ref_lo, ref_hi = search_variants["legacy-dual-descent"](
+                    pats, lens
+                )
+                if variant in search_variants:
+                    lo, hi = got
+                    assert np.array_equal(np.asarray(lo), np.asarray(ref_lo))
+                    assert np.array_equal(np.asarray(hi), np.asarray(ref_hi))
+                else:
+                    assert np.array_equal(np.asarray(got.lo), np.asarray(ref_lo))
+                ms = med * 1e3
+                rows.append([name, variant, B, round(ms, 3), launches, gathers])
+                results.append(
+                    {
+                        "collection": name,
+                        "variant": variant,
+                        "batch": B,
+                        "median_ms": round(ms, 4),
+                        "pallas_launches_per_batch": launches,
+                        "gather_eqns": gathers,
+                    }
+                )
+    emit(rows, ["collection", "variant", "batch", "median_ms",
+                "pallas_launches", "gather_eqns"])
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump({"results": results, "failures": []}, f, indent=1)
+        print(f"wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/BENCH_backward_search.json")
+    ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one collection, tiny batches, 2 iters")
+    args = ap.parse_args()
+    if args.smoke:
+        run(collections=("version-p001",), batch_sizes=(1, 16), iters=2,
+            out=args.out)
+    else:
+        run(batch_sizes=tuple(args.batches), out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,18 @@
 """End-to-end batched serving benchmark: QPS and latency percentiles.
 
-Measures the three planned endpoints (listing, top-k, tf-idf) of
-``RetrievalService`` at batch sizes {1, 16, 128} — each batch is ONE
-compiled program per shape bucket, so after the first (warmup) call per
-bucket the loop below is pure execution.  Emits the usual CSV rows plus an
-optional dry-run-shaped JSON ({"results": [...], "failures": []}) so the
-perf trajectory can track serving throughput next to the roofline numbers.
+Measures the planner stage plus the three planned endpoints (listing,
+top-k, tf-idf) of ``RetrievalService`` at batch sizes {1, 16, 128} — each
+batch is ONE compiled program per shape bucket, so after the first (warmup)
+call per bucket the loop below is pure execution.  The ``plan`` endpoint
+isolates the stage the fused backward-search kernel targets; it is timed
+on whatever search path the service was built with (kernel on TPU, XLA
+pair descent elsewhere — see benchmarks.backward_search_bench for the
+per-path comparison).  Emits the usual CSV rows plus a dry-run-shaped JSON
+({"results": [...], "failures": []}) at experiments/BENCH_serve.json so
+the perf trajectory can track serving throughput next to the roofline
+numbers.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--out experiments/serve_bench.json]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--out experiments/BENCH_serve.json]
 """
 
 from __future__ import annotations
@@ -27,8 +32,12 @@ BATCH_SIZES = (1, 16, 128)
 ITERS = 20
 
 
-def _timed(fn, iters: int = ITERS):
-    fn()  # warmup: compiles the bucket's program
+def _timed(fn, iters: int = ITERS, warmup: int = 1):
+    # warmup: compiles the bucket's program; one full pass over the batch
+    # cycle also settles the dispatch-aware brute windows (grow-only), so
+    # the timed loop below is pure execution
+    for _ in range(warmup):
+        fn()
     lat = []
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -39,7 +48,8 @@ def _timed(fn, iters: int = ITERS):
 
 
 def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
-        k: int = 10, max_df: int = 128, max_buf: int = 1024, out: str | None = None):
+        k: int = 10, max_df: int = 128, max_buf: int = 1024,
+        out: str | None = None, iters: int = ITERS):
     rows, results = [], []
     for name in collections:
         coll = bench_collections()[name]
@@ -50,7 +60,7 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         rng = np.random.default_rng(0)
 
         for B in batch_sizes:
-            idx = rng.integers(0, len(workload), size=(ITERS + 1, B))
+            idx = rng.integers(0, len(workload), size=(iters + 1, B))
             batches = [[workload[i] for i in row] for row in idx]
             it = iter(range(10_000))
 
@@ -61,12 +71,13 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
                 return [b[i : i + 2] for i in range(0, len(b), 2)] or [b[:1]]
 
             endpoints = {
+                "plan": lambda: svc.plan(batch()),
                 "list": lambda: svc.list_docs(batch(), max_df=max_df, max_buf=max_buf),
                 "topk": lambda: svc.topk(batch(), k=k, max_buf=max_buf),
                 "tfidf": lambda: svc.tfidf(pairs(batch()), k=k, max_buf=max_buf),
             }
             for ep, fn in endpoints.items():
-                p50, p99, mean = _timed(fn)
+                p50, p99, mean = _timed(fn, iters=iters, warmup=iters + 1)
                 nq = B if ep != "tfidf" else max(1, B // 2)
                 qps = nq / (mean / 1e3)
                 rows.append(
@@ -94,10 +105,16 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default="experiments/BENCH_serve.json")
     ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one collection, tiny batches, 3 iters")
     args = ap.parse_args()
-    run(batch_sizes=tuple(args.batches), out=args.out)
+    if args.smoke:
+        run(collections=("version-p001",), batch_sizes=(1, 16), iters=3,
+            out=args.out)
+    else:
+        run(batch_sizes=tuple(args.batches), out=args.out)
 
 
 if __name__ == "__main__":

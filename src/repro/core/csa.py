@@ -140,20 +140,40 @@ def csa_search_batch(csa: CSA, patterns, lengths):
     )
 
 
-def csa_search_planned(csa: CSA, patterns, lengths, *, use_rank_kernel: bool = False):
+def csa_search_planned(csa: CSA, patterns, lengths, *, use_kernel: bool | None = None,
+                       block_q: int = 256, interpret: bool | None = None):
     """Backward search written batch-first for the serving planner.
 
-    Same integers as ``csa_search_batch``, but the scan carries [B] range
-    arrays and each step issues its two rank_c calls for the *whole batch*
-    at once — which lets ``use_rank_kernel=True`` route them through the
-    Pallas bitvector-rank kernel (repro.kernels.rank), one 2B-query stream
-    per wavelet level per symbol step.
-    """
-    from repro.succinct.wavelet import wm_rank_batch
+    Same integers as ``csa_search_batch``, but computed over [B] range
+    arrays with both SA-range boundaries riding ONE wavelet descent per
+    symbol step (``wm_rank_pair_batch``) — half the per-level rank gathers
+    of two independent ``wm_rank_batch`` descents.
 
+    ``use_kernel`` selects the execution path:
+      * ``None``  — auto: the fused Pallas kernel on TPU, XLA elsewhere;
+      * ``True``  — force the fused kernel (``repro.kernels.backward_search``;
+        one ``pallas_call`` for the whole batched search, interpret mode
+        off-TPU unless ``interpret`` says otherwise);
+      * ``False`` — force the XLA pair-descent path.
+    """
     patterns = as_i32(patterns)
     lengths = as_i32(lengths)
     B, max_m = patterns.shape
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.ops import backward_search
+
+        return backward_search(
+            csa.wm.words, csa.wm.ones_prefix, csa.wm.zcount,
+            csa.counts[: csa.sigma] - csa.wm.sym_starts,
+            patterns, lengths,
+            n=csa.n, sigma=csa.sigma, block_q=block_q, interpret=interpret,
+        )
+
+    from repro.succinct.wavelet import wm_rank_pair_batch
+
     rows = jnp.arange(B, dtype=IDX)
 
     def body(carry, t):
@@ -167,8 +187,7 @@ def csa_search_planned(csa: CSA, patterns, lengths, *, use_rank_kernel: bool = F
         c_ok = (c >= 0) & (c < csa.sigma)
         cc = jnp.clip(c, 0, csa.sigma - 1)
         oob = jnp.where(c < 0, 0, csa.n)
-        rlo = wm_rank_batch(csa.wm, cc, lo, use_kernel=use_rank_kernel)
-        rhi = wm_rank_batch(csa.wm, cc, hi, use_kernel=use_rank_kernel)
+        rlo, rhi = wm_rank_pair_batch(csa.wm, cc, lo, hi)
         lo = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rlo, oob), lo)
         hi = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rhi, oob), hi)
         return (lo, hi), None

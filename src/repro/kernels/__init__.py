@@ -1,15 +1,26 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-rank            — batched bitvector rank (popcount)           [paper 2.2/5.1]
+backward_search — fused CSA backward search: the whole m-step  [paper 2.2/6.2.2]
+                  symbol loop x wavelet descent for a pattern
+                  batch in ONE pallas_call (launch-count
+                  contract: 1 per batch, down from 2*m*levels)
+rank            — batched bitvector rank (popcount)            [paper 2.2/5.1]
 rmq             — batched sparse-table range-minimum           [paper 2.3/3.3]
 embedding_bag   — fused gather+reduce over embedding tables    [recsys archs]
 flash_attention — blocked online-softmax attention             [LM archs]
 
 Each kernel ships with a pure-jnp oracle in ref.py; tests sweep shapes and
 dtypes against it in interpret mode (this container is CPU-only; TPU is the
-compile target).
+compile target).  Wrappers in ops.py auto-detect the backend and fall back
+to the oracle on shapes the kernel does not tile.
 """
 
-from repro.kernels.ops import embedding_bag, flash_attention, rank, rmq
+from repro.kernels.ops import (
+    backward_search,
+    embedding_bag,
+    flash_attention,
+    rank,
+    rmq,
+)
 
-__all__ = ["rank", "rmq", "embedding_bag", "flash_attention"]
+__all__ = ["backward_search", "rank", "rmq", "embedding_bag", "flash_attention"]

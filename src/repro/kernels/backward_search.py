@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused CSA backward search — one launch per batch.
+
+Every query the serving engine answers starts with the backward search of
+the pattern over the BWT wavelet matrix (paper Sections 2.2 / 6.2.2).  The
+pre-fusion planner paid for it as ``2 * m * levels`` separate Pallas rank
+launches (one per wavelet level per symbol step per range boundary), with
+an HBM round-trip for the (lo, hi) carry between every launch.  This kernel
+runs the ENTIRE search in one ``pallas_call``:
+
+  * the wavelet matrix's per-level ``words`` / ``ones_prefix`` arrays are
+    flattened with a level stride (the RMQ kernel's flattened-sparse-table
+    trick) and stay VMEM-resident across the whole search;
+  * the query batch streams through the grid in ``block_q`` tiles;
+  * inside one grid step, a ``fori_loop`` over the ``max_m`` symbol slots
+    wraps a ``fori_loop`` over the levels, carrying the (lo, hi) boundary
+    pair so both ranks of a step share one descent;
+  * the per-symbol block start of the classic wavelet-matrix rank is
+    precomputed at build time (``WaveletMatrix.sym_starts``), folded with
+    the C-array into ``base[c] = counts[c] - sym_starts[c]``, so each
+    boundary costs ONE rank gather per level.
+
+Patterns arrive right-to-left (processing order) — callers reverse the
+padded rows once up front (``repro.kernels.ops.backward_search`` does).
+Out-of-alphabet symbols collapse the range to the empty range at the
+symbol's lexicographic insertion point (0 below the alphabet, n above),
+matching the host binary search's convention; rows padded beyond the true
+batch get length 0 and return the untouched (0, n) seed, which callers trim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _backward_search_kernel(
+    pat_ref, len_ref, words_ref, prefix_ref, zcount_ref, base_ref,
+    lo_ref, hi_ref, *, levels: int, stride: int, n: int, sigma: int,
+    max_m: int,
+):
+    pats = pat_ref[...]          # int32[block_q, max_m], right-to-left
+    lengths = len_ref[...]       # int32[block_q]
+    words = words_ref[...]       # uint32[levels * stride], VMEM-resident
+    prefix = prefix_ref[...]     # int32[levels * stride]
+    zcount = zcount_ref[...]     # int32[levels]
+    base = base_ref[...]         # int32[sigma]: counts[c] - sym_starts[c]
+
+    def rank1(lvl, pos):
+        w = lvl * stride + (pos >> 5)
+        off = (pos & 31).astype(jnp.uint32)
+        mask = (jnp.uint32(1) << off) - jnp.uint32(1)
+        pc = jax.lax.population_count(words[w] & mask).astype(jnp.int32)
+        return prefix[w] + pc
+
+    def sym_step(t, carry):
+        lo, hi = carry
+        c = jax.lax.dynamic_index_in_dim(pats, t, axis=1, keepdims=False)
+        active = (t < lengths) & (lo < hi)
+        c_ok = (c >= 0) & (c < sigma)
+        cc = jnp.clip(c, 0, sigma - 1)
+
+        def level_step(lvl, pq):
+            p, q = pq
+            bit = (cc >> (levels - 1 - lvl)) & 1
+            z = zcount[lvl]
+            r1p = rank1(lvl, p)
+            r1q = rank1(lvl, q)
+            p = jnp.where(bit == 0, p - r1p, z + r1p)
+            q = jnp.where(bit == 0, q - r1q, z + r1q)
+            return (p, q)
+
+        dlo, dhi = jax.lax.fori_loop(0, levels, level_step, (lo, hi))
+        b = base[cc]
+        oob = jnp.where(c < 0, 0, n)
+        lo = jnp.where(active, jnp.where(c_ok, b + dlo, oob), lo)
+        hi = jnp.where(active, jnp.where(c_ok, b + dhi, oob), hi)
+        return (lo, hi)
+
+    lo0 = jnp.zeros_like(lengths)
+    hi0 = jnp.full_like(lengths, n)
+    lo, hi = jax.lax.fori_loop(0, max_m, sym_step, (lo0, hi0))
+    lo_ref[...] = lo
+    hi_ref[...] = jnp.maximum(lo, hi)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "sigma", "block_q", "interpret")
+)
+def backward_search_pallas(
+    words: jnp.ndarray,        # uint32[levels, W+1] wavelet-matrix words
+    ones_prefix: jnp.ndarray,  # int32[levels, W+1]
+    zcount: jnp.ndarray,       # int32[levels]
+    base: jnp.ndarray,         # int32[sigma]: counts[c] - sym_starts[c]
+    rev_patterns: jnp.ndarray, # int32[B, max_m], right-to-left symbol order
+    lengths: jnp.ndarray,      # int32[B]
+    *,
+    n: int,
+    sigma: int,
+    block_q: int = 256,
+    interpret: bool = True,
+):
+    """Fused batched backward search: (lo int32[B], hi int32[B]).
+
+    ONE ``pallas_call`` regardless of batch size, pattern length, or level
+    count — the launch-count contract the serving planner's tests assert.
+    """
+    levels, stride = words.shape
+    B, max_m = rev_patterns.shape
+    bq = min(block_q, max(B, 1))
+    bpad = -(-B // bq) * bq
+    pat_p = jnp.zeros((bpad, max_m), jnp.int32).at[:B].set(rev_patterns)
+    len_p = jnp.zeros(bpad, jnp.int32).at[:B].set(lengths)
+    kernel = functools.partial(
+        _backward_search_kernel,
+        levels=levels, stride=stride, n=n, sigma=sigma, max_m=max_m,
+    )
+    lo, hi = pl.pallas_call(
+        kernel,
+        grid=(bpad // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, max_m), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((levels * stride,), lambda i: (0,)),
+            pl.BlockSpec((levels * stride,), lambda i: (0,)),
+            pl.BlockSpec(zcount.shape, lambda i: (0,)),
+            pl.BlockSpec(base.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq,), lambda i: (i,)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bpad,), jnp.int32),
+            jax.ShapeDtypeStruct((bpad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pat_p, len_p, words.reshape(-1), ones_prefix.reshape(-1), zcount, base)
+    return lo[:B], hi[:B]

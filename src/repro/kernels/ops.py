@@ -13,10 +13,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backward_search import backward_search_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rank import rank_pallas
 from repro.kernels.rmq import rmq_pallas
+
+#: per-core VMEM the backward-search kernel may claim for the wavelet
+#: matrix; larger indexes take the XLA pair-descent path instead (sharding
+#: the index over cores is the ROADMAP's per-shard serving follow-up).
+BACKWARD_SEARCH_VMEM_BUDGET = 12 * 2**20
 
 
 def _auto_interpret(interpret):
@@ -28,6 +34,40 @@ def _auto_interpret(interpret):
 def rank(words, ones_prefix, idx, *, block_q=1024, interpret=None):
     return rank_pallas(
         words, ones_prefix, idx, block_q=block_q,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def backward_search(words, ones_prefix, zcount, base, patterns, lengths, *,
+                    n, sigma, block_q=256, interpret=None):
+    """Fused batched CSA backward search (see repro.kernels.backward_search).
+
+    Takes natural left-to-right padded patterns; the right-to-left
+    processing order the kernel wants is materialised here with one gather.
+    Odd shapes (empty batch, zero-width patterns, degenerate alphabet) and
+    wavelet matrices past the VMEM budget fall back to the pure-jnp oracle
+    — the framework never fails on shape, it just takes the XLA path.
+    """
+    patterns = jnp.asarray(patterns, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    B, max_m = patterns.shape
+    j = jnp.clip(
+        lengths[:, None] - 1 - jnp.arange(max_m, dtype=jnp.int32)[None, :],
+        0, max(max_m - 1, 0),
+    )
+    rev = jnp.take_along_axis(patterns, j, axis=1) if max_m else patterns
+    resident_bytes = sum(int(a.size) * 4 for a in (words, ones_prefix)) + \
+        int(zcount.size + base.size) * 4
+    if (
+        B == 0 or max_m == 0 or base.shape[0] == 0
+        or resident_bytes > BACKWARD_SEARCH_VMEM_BUDGET
+    ):
+        return ref.backward_search_ref(
+            words, ones_prefix, zcount, base, rev, lengths, n=n, sigma=sigma
+        )
+    return backward_search_pallas(
+        words, ones_prefix, zcount, base, rev, lengths,
+        n=n, sigma=sigma, block_q=block_q,
         interpret=_auto_interpret(interpret),
     )
 

@@ -21,6 +21,70 @@ def rank_ref(words: jnp.ndarray, ones_prefix: jnp.ndarray, idx: jnp.ndarray):
     return ones_prefix[w] + jax.lax.population_count(word & mask).astype(jnp.int32)
 
 
+def backward_search_ref(
+    words: jnp.ndarray,        # uint32[levels, W+1] wavelet-matrix words
+    ones_prefix: jnp.ndarray,  # int32[levels, W+1]
+    zcount: jnp.ndarray,       # int32[levels]
+    base: jnp.ndarray,         # int32[sigma]: counts[c] - sym_starts[c]
+    rev_patterns: jnp.ndarray, # int32[B, max_m], right-to-left symbol order
+    lengths: jnp.ndarray,      # int32[B]
+    *,
+    n: int,
+    sigma: int,
+):
+    """Batched CSA backward search over the BWT wavelet matrix.
+
+    Same operand layout and the same integers as the fused Pallas kernel
+    (repro.kernels.backward_search): patterns pre-reversed into processing
+    order, both range boundaries sharing one descent per symbol step, one
+    rank gather per level per boundary via the precomputed block-start
+    ``base``.  Out-of-alphabet symbols collapse to the empty range at the
+    symbol's insertion point; length-0 rows return the untouched (0, n).
+    """
+    levels = words.shape[0]
+    B, max_m = rev_patterns.shape
+    flat_w = words.reshape(-1)
+    flat_p = ones_prefix.reshape(-1)
+    stride = words.shape[1]
+
+    def rank1(lvl, pos):
+        w = lvl * stride + (pos >> 5)
+        off = (pos & 31).astype(jnp.uint32)
+        mask = (jnp.uint32(1) << off) - jnp.uint32(1)
+        pc = jax.lax.population_count(flat_w[w] & mask).astype(jnp.int32)
+        return flat_p[w] + pc
+
+    def sym_step(carry, c):
+        lo, hi, t = carry
+        active = (t < lengths) & (lo < hi)
+        c_ok = (c >= 0) & (c < sigma)
+        cc = jnp.clip(c, 0, sigma - 1)
+
+        def level_step(lvl, pq):
+            p, q = pq
+            bit = (cc >> (levels - 1 - lvl)) & 1
+            z = zcount[lvl]
+            r1p = rank1(lvl, p)
+            r1q = rank1(lvl, q)
+            p = jnp.where(bit == 0, p - r1p, z + r1p)
+            q = jnp.where(bit == 0, q - r1q, z + r1q)
+            return (p, q)
+
+        dlo, dhi = jax.lax.fori_loop(0, levels, level_step, (lo, hi))
+        b = base[cc]
+        oob = jnp.where(c < 0, 0, n)
+        lo = jnp.where(active, jnp.where(c_ok, b + dlo, oob), lo)
+        hi = jnp.where(active, jnp.where(c_ok, b + dhi, oob), hi)
+        return (lo, hi, t + 1), None
+
+    (lo, hi, _), _ = jax.lax.scan(
+        sym_step,
+        (jnp.zeros(B, jnp.int32), jnp.full(B, n, jnp.int32), jnp.int32(0)),
+        rev_patterns.T,
+    )
+    return lo, jnp.maximum(lo, hi)
+
+
 def rmq_ref(values: jnp.ndarray, table: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray):
     """Batched leftmost-argmin over values[lo..hi] via the sparse table.
 

@@ -62,18 +62,20 @@ def plan_queries(
     occ_df_threshold,          # traced f32 scalar
     forced_engine,             # traced i32 scalar; -1 = auto dispatch
     *,
-    use_rank_kernel: bool = False,
+    use_kernel: bool | None = None,
 ) -> QueryPlan:
     """One fused pass: ranges + df + occ + engine assignment.
 
     Rows with length 0 (batch padding) and patterns with no occurrences get
     ``ENGINE_EMPTY``; executors skip them under masking and the serving
-    layer reports them as empty results.  ``use_rank_kernel`` routes the
-    range search's rank calls through the Pallas kernel (TPU hot path).
+    layer reports them as empty results.  ``use_kernel`` selects the range
+    search's execution path: the fused Pallas backward-search kernel (one
+    launch per batch — the TPU hot path) or the XLA pair-descent fallback;
+    ``None`` auto-detects the backend (kernel iff TPU).
     """
     lengths = as_i32(lengths)
     lo, hi = csa_search_planned(
-        csa, as_i32(patterns), lengths, use_rank_kernel=use_rank_kernel
+        csa, as_i32(patterns), lengths, use_kernel=use_kernel
     )
     hi = jnp.where(lengths > 0, hi, lo)  # padding rows: empty range
     occ = hi - lo

@@ -15,7 +15,13 @@ Execution architecture — a three-stage on-device engine:
    pattern batch computes (lo, hi) ranges, df (Sada), occ, and a per-query
    engine assignment as an int32 array.  This is the paper's Section 6.2.2
    dispatch policy (Brute-L when occ/df is small, PDL otherwise) with the
-   branching moved from Python onto the device.
+   branching moved from Python onto the device.  The range search runs as
+   ONE fused Pallas backward-search launch per batch on TPU
+   (repro.kernels.backward_search; backend auto-detected) and as the
+   pair-descent XLA program elsewhere — both bit-identical to the
+   reference.  Planner occ stats also size the Brute-L locate window per
+   compile bucket (dispatch-aware, grow-only powers of two), replacing the
+   static max_buf window.
 2. **Masked batch executors** (repro.core.{listing,ilcp,pdl,tfidf}):
    vmapped fixed-shape ``*_batch`` entry points.  Every engine runs over
    the full batch with the queries not assigned to it collapsed to empty
@@ -99,6 +105,16 @@ def _bucket_len(m: int) -> int:
     return max(8, -(-m // 8) * 8)
 
 
+#: smallest dispatch-aware Brute-L window; windows grow in powers of two up
+#: to the endpoint's ``max_buf``, so each bucket recompiles at most
+#: lg(max_buf / floor) times as traffic reveals larger brute ranges.
+BRUTE_WINDOW_FLOOR = 32
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
 # ---------------------------------------------------------------------------
 # Fused programs (pure functions of the index pytrees; compiled per bucket)
 # ---------------------------------------------------------------------------
@@ -111,24 +127,28 @@ def _sorted_rows(docs):
     return jnp.where(s == _BIG, -1, s).astype(IDX)
 
 
-def _plan_program(use_rank_kernel, csa, sada, patterns, lengths, threshold, forced):
+def _plan_program(use_kernel, csa, sada, patterns, lengths, threshold, forced):
     return plan_queries(
         csa, sada, patterns, lengths, threshold, forced,
-        use_rank_kernel=use_rank_kernel,
+        use_kernel=use_kernel,
     )
 
 
 def _list_program(
-    max_df, max_buf, use_rank_kernel,
+    max_df, brute_win, max_buf, use_kernel,
     csa, ilcp, pdl, da, sada, patterns, lengths, threshold, forced,
 ):
-    """list_docs as one program: plan, run all engines masked, select."""
+    """list_docs as one program: plan, run all engines masked, select.
+
+    ``brute_win`` is the Brute-L locate window — sized per compile bucket
+    from planner occ stats (dispatch-aware), not the static ``max_buf``.
+    """
     plan = plan_queries(
         csa, sada, patterns, lengths, threshold, forced,
-        use_rank_kernel=use_rank_kernel,
+        use_kernel=use_kernel,
     )
     bl, bh = masked_ranges(plan, ENGINE_BRUTE)
-    docs_b, cnt_b, _ = brute_list_csa_batch(csa, bl, bh, max_buf, max_df)
+    docs_b, cnt_b, _ = brute_list_csa_batch(csa, bl, bh, brute_win, max_df)
     il, ih = masked_ranges(plan, ENGINE_ILCP)
     docs_i, cnt_i = ilcp_list_docs_da_batch(ilcp, da, il, ih, max_df)
     pl, ph = masked_ranges(plan, ENGINE_PDL)
@@ -149,7 +169,7 @@ def _list_program(
 
 
 def _topk_program(
-    k, max_df, max_buf, use_rank_kernel,
+    k, max_df, brute_win, max_buf, use_kernel,
     csa, pdl_t, sada, patterns, lengths, threshold, forced,
 ):
     """top-k as one program.  Brute-assigned queries take the sorted-window
@@ -157,10 +177,10 @@ def _topk_program(
     its queries ride the PDL lists, as in the paper's Section 6.3 lineup."""
     plan = plan_queries(
         csa, sada, patterns, lengths, threshold, forced,
-        use_rank_kernel=use_rank_kernel,
+        use_kernel=use_kernel,
     )
     bl, bh = masked_ranges(plan, ENGINE_BRUTE)
-    d_b, c_b, f_b = brute_list_csa_batch(csa, bl, bh, max_buf, max_df)
+    d_b, c_b, f_b = brute_list_csa_batch(csa, bl, bh, brute_win, max_df)
     tb_docs, tb_tf = brute_topk_batch(d_b, c_b, f_b, k)
 
     use_pdl = (plan.engine == ENGINE_PDL) | (plan.engine == ENGINE_ILCP)
@@ -197,8 +217,10 @@ class RetrievalService:
     sada: object
     da: object
     occ_df_threshold: float = 4.0     # paper: brute wins when occ/df < ~4
-    use_rank_kernel: bool = False     # Pallas rank in the planner (TPU path)
+    use_search_kernel: bool = False   # fused Pallas backward search (TPU path)
+    brute_window: int | None = None   # None = size per bucket from occ stats
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    _brute_windows: dict = dataclasses.field(default_factory=dict, repr=False)
     compile_counts: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # -- construction --------------------------------------------------------
@@ -207,11 +229,14 @@ class RetrievalService:
     def build(
         cls, coll: Collection, block_size: int = 64, beta: float = 16.0,
         sada_variant: str = "sparse", sample_rate: int = 16,
-        use_rank_kernel: bool | None = None,
+        use_search_kernel: bool | None = None,
+        brute_window: int | None = None,
     ):
         data = build_suffix_data(coll)
-        if use_rank_kernel is None:
-            use_rank_kernel = jax.default_backend() == "tpu"
+        if use_search_kernel is None:
+            # backend auto-detection: the fused backward-search kernel is
+            # the default on TPU; elsewhere the XLA pair descent wins
+            use_search_kernel = jax.default_backend() == "tpu"
         return cls(
             coll=coll,
             csa=build_csa(data, sample_rate=sample_rate),
@@ -220,7 +245,8 @@ class RetrievalService:
             pdl_topk=build_pdl(data, block_size=block_size, beta=None, mode="topk"),
             sada=build_sada(data, sada_variant),
             da=jnp.asarray(data.da),
-            use_rank_kernel=use_rank_kernel,
+            use_search_kernel=use_search_kernel,
+            brute_window=brute_window,
         )
 
     # -- compile cache -------------------------------------------------------
@@ -253,6 +279,30 @@ class RetrievalService:
         forced = jnp.int32(ENGINE_CODES[engine])
         return thresh, forced
 
+    def _brute_window_for(self, kind: str, bucket_key: tuple, patterns,
+                          engine: str, max_buf: int) -> int:
+        """Dispatch-aware Brute-L window (ROADMAP item): sized per compile
+        bucket from the planner's occ stats instead of the static
+        ``max_buf``.
+
+        The plan pass is one (cached) compiled program; the window is the
+        power-of-two cover of the largest occ among brute-assigned queries,
+        clamped to [BRUTE_WINDOW_FLOOR, max_buf], and grows monotonically
+        per bucket so recompiles are bounded by lg(max_buf).  Results are
+        unchanged: the brute executor masks the window against each query's
+        true occ, and queries past max_buf truncate exactly as the
+        reference path does."""
+        if self.brute_window is not None:
+            return min(self.brute_window, max_buf)
+        plan = self.plan(patterns, engine)
+        occ = plan["occ"][plan["engine"] == ENGINE_BRUTE]
+        needed = int(occ.max()) if occ.size else 0
+        win = min(max(_pow2_ceil(needed), BRUTE_WINDOW_FLOOR), max_buf)
+        key = (kind, bucket_key)
+        win = max(win, self._brute_windows.get(key, 0))
+        self._brute_windows[key] = win
+        return win
+
     # -- planned endpoints (single compiled program per shape bucket) --------
 
     def plan(self, patterns, engine: str = "auto"):
@@ -262,7 +312,7 @@ class RetrievalService:
         thresh, forced = self._knobs(engine)
         exe = self._compiled(
             "plan", (pats.shape,),
-            lambda: functools.partial(_plan_program, self.use_rank_kernel),
+            lambda: functools.partial(_plan_program, self.use_search_kernel),
             (self.csa, self.sada, pats, lens, thresh, forced),
         )
         plan = exe(self.csa, self.sada, pats, lens, thresh, forced)
@@ -296,12 +346,15 @@ class RetrievalService:
             return np.zeros((0, max_df), np.int32), np.zeros(0, np.int32)
         pats, lens, B = self._pad_batch(patterns)
         thresh, forced = self._knobs(engine)
+        win = self._brute_window_for(
+            "list", (pats.shape, max_df, max_buf), patterns, engine, max_buf
+        )
         args = (self.csa, self.ilcp, self.pdl_list, self.da, self.sada,
                 pats, lens, thresh, forced)
         exe = self._compiled(
-            "list", (pats.shape, max_df, max_buf),
+            "list", (pats.shape, max_df, win, max_buf),
             lambda: functools.partial(
-                _list_program, max_df, max_buf, self.use_rank_kernel
+                _list_program, max_df, win, max_buf, self.use_search_kernel
             ),
             args,
         )
@@ -330,11 +383,14 @@ class RetrievalService:
         pats, lens, B = self._pad_batch(patterns)
         thresh, forced = self._knobs(engine)
         max_df = self._topk_max_df(max_buf)
+        win = self._brute_window_for(
+            "topk", (pats.shape, k, max_buf), patterns, engine, max_buf
+        )
         args = (self.csa, self.pdl_topk, self.sada, pats, lens, thresh, forced)
         exe = self._compiled(
-            "topk", (pats.shape, k, max_df, max_buf),
+            "topk", (pats.shape, k, max_df, win, max_buf),
             lambda: functools.partial(
-                _topk_program, k, max_df, max_buf, self.use_rank_kernel
+                _topk_program, k, max_df, win, max_buf, self.use_search_kernel
             ),
             args,
         )

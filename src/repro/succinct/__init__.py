@@ -20,7 +20,10 @@ from repro.succinct.wavelet import (
     wm_access,
     wm_build,
     wm_count_less,
+    wm_descend,
     wm_rank,
+    wm_rank_pair,
+    wm_rank_pair_batch,
 )
 
 __all__ = [
@@ -33,6 +36,9 @@ __all__ = [
     "WaveletMatrix",
     "wm_build",
     "wm_rank",
+    "wm_rank_pair",
+    "wm_rank_pair_batch",
+    "wm_descend",
     "wm_access",
     "wm_count_less",
     "SparseTableRMQ",

@@ -36,11 +36,20 @@ class WaveletMatrix:
     words:        uint32[L, W+1]
     ones_prefix:  int32[L, W+1]
     zcount:       int32[L]      number of zeros at each level
+    sym_starts:   int32[sigma]  position where symbol c's block starts at the
+                                (virtual) bottom level — the full descent of
+                                position 0 following c's bits.  rank_c(S, i)
+                                is then descend(i) - sym_starts[c]: ONE
+                                carried position per query position instead
+                                of the classic (start, end) pair, which is
+                                what lets the pair-descent rank and the fused
+                                backward-search kernel halve their gathers.
     """
 
     words: jnp.ndarray
     ones_prefix: jnp.ndarray
     zcount: jnp.ndarray
+    sym_starts: jnp.ndarray
     n: int
     sigma: int
     levels: int
@@ -75,10 +84,27 @@ def wm_build(seq, sigma: int | None = None) -> WaveletMatrix:
         zc.append(int(n - bits.sum()))
         # stable partition: zeros first
         cur = np.concatenate([cur[bits == 0], cur[bits == 1]])
+
+    # per-symbol block starts: descend position 0 for every c simultaneously
+    def host_rank1(lvl, pos):
+        w = pos >> 5
+        mask = (np.uint32(1) << (pos & 31).astype(np.uint32)) - np.uint32(1)
+        masked = words_l[lvl][w] & mask
+        pc = np.array([int(v).bit_count() for v in masked], dtype=np.int64)
+        return prefix_l[lvl][w].astype(np.int64) + pc
+
+    syms = np.arange(sigma, dtype=np.int64)
+    s = np.zeros(sigma, dtype=np.int64)
+    for lvl in range(levels):
+        bit = (syms >> (levels - 1 - lvl)) & 1
+        r1 = host_rank1(lvl, s)
+        s = np.where(bit == 0, s - r1, zc[lvl] + r1)
+
     return WaveletMatrix(
         words=jnp.asarray(np.stack(words_l)),
         ones_prefix=jnp.asarray(np.stack(prefix_l)),
         zcount=jnp.asarray(np.asarray(zc, dtype=np.int32)),
+        sym_starts=jnp.asarray(s.astype(np.int32)),
         n=n,
         sigma=int(sigma),
         levels=levels,
@@ -149,6 +175,57 @@ def wm_rank_batch(wm: WaveletMatrix, c, i, *, use_kernel: bool = False,
     return (hi - lo).astype(IDX)
 
 
+def wm_descend(wm: WaveletMatrix, c, i):
+    """Descend position(s) ``i`` along symbol ``c``'s bit path.
+
+    One rank gather per level per position.  ``rank_c(S, i)`` equals
+    ``wm_descend(wm, c, i) - wm.sym_starts[c]`` — the block-start carry of
+    the classic two-position descent is precomputed at build time, so a
+    rank costs half the gathers of ``wm_rank``.  c must be in [0, sigma);
+    c and i may be scalars or equal-shape arrays (elementwise).
+    """
+    c = as_i32(c)
+
+    def body(lvl, p):
+        bit = (c >> (wm.levels - 1 - lvl)) & 1
+        r1 = wm._rank1_level(lvl, p)
+        return jnp.where(bit == 0, p - r1, wm.zcount[lvl] + r1)
+
+    return jax.lax.fori_loop(0, wm.levels, body, as_i32(i))
+
+
+def wm_rank_pair(wm: WaveletMatrix, c, lo, hi):
+    """Fused boundary-pair rank: (rank_c(S, lo), rank_c(S, hi)).
+
+    Both positions ride one descent along c's bit path — 2 rank gathers per
+    level against the 4 of two independent ``wm_rank`` calls.  This is the
+    XLA-fallback core of the backward-search step (both SA-range boundaries
+    share the pattern symbol) and of the ILCP counting value loop.  c must
+    be in [0, sigma); all args may be scalars or equal-shape arrays.
+    """
+    c = as_i32(c)
+
+    def body(lvl, pq):
+        p, q = pq
+        bit = (c >> (wm.levels - 1 - lvl)) & 1
+        z = wm.zcount[lvl]
+        r1p = wm._rank1_level(lvl, p)
+        r1q = wm._rank1_level(lvl, q)
+        p = jnp.where(bit == 0, p - r1p, z + r1p)
+        q = jnp.where(bit == 0, q - r1q, z + r1q)
+        return (p, q)
+
+    dlo, dhi = jax.lax.fori_loop(0, wm.levels, body, (as_i32(lo), as_i32(hi)))
+    start = wm.sym_starts[c]
+    return (dlo - start).astype(IDX), (dhi - start).astype(IDX)
+
+
+def wm_rank_pair_batch(wm: WaveletMatrix, c, lo, hi):
+    """Batched ``wm_rank_pair`` over int32[B] symbol/position arrays —
+    alias kept separate so call sites document batch-first intent."""
+    return wm_rank_pair(wm, c, lo, hi)
+
+
 def wm_access(wm: WaveletMatrix, i):
     """S[i]."""
 
@@ -168,7 +245,12 @@ def wm_access(wm: WaveletMatrix, i):
 
 
 def wm_count_less(wm: WaveletMatrix, lo, hi, m):
-    """Number of positions p in [lo, hi) with S[p] < m.  Traced args ok."""
+    """Number of positions p in [lo, hi) with S[p] < m.  Traced args ok;
+    lo/hi/m may also be equal-shape arrays (elementwise batch).
+
+    Both range boundaries ride one descent along m's bit path (the same
+    pair-descent fusion as ``wm_rank_pair``): 2 rank gathers per level.
+    """
     m = as_i32(m)
 
     def body(lvl, carry):

@@ -1,15 +1,32 @@
-"""Test bootstrap: gate optional third-party test deps.
+"""Test bootstrap: gate optional third-party test deps + compile-cache
+hygiene.
 
 The property-based suites use ``hypothesis``; this container image does not
 ship it and nothing may be pip-installed here.  When the real package is
 absent, a minimal API-compatible shim (tests/_stubs/hypothesis) is put on
 sys.path so the suites still collect and run as seeded randomized tests.
 With hypothesis installed (e.g. in CI) the shim is never imported.
+
+The full suite compiles several hundred XLA programs in one process; on
+single-core CPU runners the accumulated executables eventually crash the
+native compiler (segfault inside ``backend_compile`` on the next large
+vmapped while-loop program).  Dropping jax's program caches between test
+modules keeps the JIT arena bounded; within a module, caches (and
+therefore compile counts asserted by the serving tests) are untouched.
 """
 
 import importlib.util
 import os
 import sys
 
+import jax
+import pytest
+
 if importlib.util.find_spec("hypothesis") is None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

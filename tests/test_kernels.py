@@ -5,15 +5,25 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels.backward_search import backward_search_pallas
 from repro.kernels.embedding_bag import csr_to_padded, embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rank import rank_pallas
 from repro.kernels.rmq import rmq_pallas
 from repro.succinct.bitvector import plain_from_bits
 from repro.succinct.rmq import rmq_build
+from repro.succinct.wavelet import wm_build
 
 RNG = np.random.default_rng(53)
+
+
+def count_eqns(jaxpr, name: str) -> int:
+    """Occurrences of a primitive in a jaxpr, descending into sub-jaxprs."""
+    total = sum(1 for eqn in jaxpr.eqns if eqn.primitive.name == name)
+    for sub in jax.core.subjaxprs(jaxpr):
+        total += count_eqns(sub, name)
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -140,3 +150,225 @@ def test_flash_attention_grad():
     g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(g1, g2):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# backward search (fused CSA range search)
+# ---------------------------------------------------------------------------
+
+
+def _bws_index(n, sigma, seed):
+    """Wavelet matrix over a random sequence + the FM-index base array
+    (C[c] - sym_starts[c]); returns the raw sequence for ground truth."""
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n)
+    wm = wm_build(seq, sigma)
+    counts = np.concatenate([[0], np.cumsum(np.bincount(seq, minlength=sigma))])
+    base = jnp.asarray(counts[:sigma], jnp.int32) - wm.sym_starts
+    return seq, wm, base, counts
+
+
+def _bws_truth(seq, counts, n, sigma, pat):
+    """Textbook per-symbol backward search with the serving layer's
+    conventions: empty pattern -> (0, n); out-of-alphabet symbol collapses
+    to the empty range at its lexicographic insertion point."""
+    lo, hi = 0, n
+    for c in map(int, reversed(pat)):
+        if lo >= hi:
+            break
+        if c < 0 or c >= sigma:
+            lo = hi = 0 if c < 0 else n
+            break
+        lo = int(counts[c]) + int(np.sum(seq[:lo] == c))
+        hi = int(counts[c]) + int(np.sum(seq[:hi] == c))
+    return lo, max(lo, hi)
+
+
+def _bws_patterns(seq, sigma, Q, max_m, seed, oob=True):
+    rng = np.random.default_rng(seed)
+    pats = np.zeros((Q, max_m), np.int32)
+    lens = rng.integers(0, max_m + 1, Q).astype(np.int32)
+    for qi in range(Q):
+        m = int(lens[qi])
+        if m == 0:
+            continue
+        if rng.random() < 0.5 and m <= len(seq):
+            start = rng.integers(0, len(seq) - m + 1)
+            pats[qi, :m] = seq[start : start + m]  # guaranteed hits
+        else:
+            pats[qi, :m] = rng.integers(0, sigma, m)
+        if oob and rng.random() < 0.25:
+            pats[qi, rng.integers(0, m)] = rng.choice(
+                [-3, -1, sigma, sigma + 5]
+            )
+    return jnp.asarray(pats), jnp.asarray(lens)
+
+
+def _reversed_pats(pats, lens):
+    """Right-to-left symbol order, as ops.backward_search materialises it."""
+    B, max_m = pats.shape
+    j = jnp.clip(
+        lens[:, None] - 1 - jnp.arange(max_m, dtype=jnp.int32)[None, :],
+        0, max(max_m - 1, 0),
+    )
+    return jnp.take_along_axis(pats, j, axis=1)
+
+
+@pytest.mark.parametrize("sigma", [2, 5, 37])
+@pytest.mark.parametrize("Q,block_q", [(1, 256), (33, 8), (64, 16)])
+def test_backward_search_kernel(sigma, Q, block_q):
+    """Interpret-mode kernel == ref oracle == ground truth, including Q not
+    a multiple of block_q and out-of-alphabet symbols."""
+    n, max_m = 500, 9
+    seq, wm, base, counts = _bws_index(n, sigma, seed=sigma)
+    pats, lens = _bws_patterns(seq, sigma, Q, max_m, seed=Q * 31 + sigma)
+
+    lo_k, hi_k = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base, pats, lens,
+        n=n, sigma=sigma, block_q=block_q, interpret=True,
+    )
+    rev = _reversed_pats(pats, lens)
+    lo_r, hi_r = ref.backward_search_ref(
+        wm.words, wm.ones_prefix, wm.zcount, base, rev, lens, n=n, sigma=sigma
+    )
+    np.testing.assert_array_equal(np.asarray(lo_k), np.asarray(lo_r))
+    np.testing.assert_array_equal(np.asarray(hi_k), np.asarray(hi_r))
+    # and the raw kernel entry point (wrapper-materialised reversal aside)
+    lo_p, hi_p = backward_search_pallas(
+        wm.words, wm.ones_prefix, wm.zcount, base, rev, lens,
+        n=n, sigma=sigma, block_q=block_q, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(lo_p), np.asarray(lo_r))
+    np.testing.assert_array_equal(np.asarray(hi_p), np.asarray(hi_r))
+    for qi in range(Q):
+        lo_t, hi_t = _bws_truth(
+            seq, counts, n, sigma, np.asarray(pats[qi, : lens[qi]])
+        )
+        assert (int(lo_k[qi]), int(hi_k[qi])) == (lo_t, hi_t), f"query {qi}"
+
+
+def test_backward_search_oob_stays_empty():
+    """Any out-of-alphabet symbol must collapse the range to empty and keep
+    it empty through the remaining (earlier) symbols."""
+    n, sigma, max_m = 300, 6, 7
+    seq, wm, base, _ = _bws_index(n, sigma, seed=2)
+    rng = np.random.default_rng(7)
+    pats = rng.integers(0, sigma, (32, max_m)).astype(np.int32)
+    lens = np.full(32, max_m, np.int32)
+    pats[:, 3] = np.where(np.arange(32) % 2 == 0, sigma + 4, -2)
+    lo, hi = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base,
+        jnp.asarray(pats), jnp.asarray(lens),
+        n=n, sigma=sigma, block_q=8, interpret=True,
+    )
+    assert np.array_equal(np.asarray(lo), np.asarray(hi))
+
+
+def test_backward_search_odd_shape_fallback(monkeypatch):
+    """Empty batch / zero-width patterns / over-budget indexes must take the
+    pure-jnp path: correct results, zero pallas_call in the jaxpr."""
+    n, sigma, max_m = 200, 5, 6
+    seq, wm, base, counts = _bws_index(n, sigma, seed=4)
+
+    def launches(pats, lens):
+        fn = lambda p, l: ops.backward_search(  # noqa: E731
+            wm.words, wm.ones_prefix, wm.zcount, base, p, l,
+            n=n, sigma=sigma, interpret=True,
+        )
+        return count_eqns(jax.make_jaxpr(fn)(pats, lens).jaxpr, "pallas_call")
+
+    # B == 0
+    e_pats = jnp.zeros((0, max_m), jnp.int32)
+    e_lens = jnp.zeros(0, jnp.int32)
+    assert launches(e_pats, e_lens) == 0
+    lo, hi = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base, e_pats, e_lens,
+        n=n, sigma=sigma, interpret=True,
+    )
+    assert lo.shape == (0,) and hi.shape == (0,)
+
+    # max_m == 0: every row is the empty pattern -> full range (0, n)
+    z_pats = jnp.zeros((4, 0), jnp.int32)
+    z_lens = jnp.zeros(4, jnp.int32)
+    assert launches(z_pats, z_lens) == 0
+    lo, hi = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base, z_pats, z_lens,
+        n=n, sigma=sigma, interpret=True,
+    )
+    assert np.all(np.asarray(lo) == 0) and np.all(np.asarray(hi) == n)
+
+    # over the VMEM budget: same integers through the oracle, no launch
+    pats, lens = _bws_patterns(seq, sigma, 16, max_m, seed=11)
+    want = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base, pats, lens,
+        n=n, sigma=sigma, interpret=True,
+    )
+    monkeypatch.setattr(ops, "BACKWARD_SEARCH_VMEM_BUDGET", 1)
+    assert launches(pats, lens) == 0
+    got = ops.backward_search(
+        wm.words, wm.ones_prefix, wm.zcount, base, pats, lens,
+        n=n, sigma=sigma, interpret=True,
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_backward_search_single_launch():
+    """The launch-count contract: the whole planned range search for a
+    padded batch is exactly ONE pallas_call (down from 2*m*levels rank
+    calls); the XLA fallback is zero launches and bit-identical."""
+    from repro.core.csa import build_csa, csa_search_planned
+    from repro.core.suffix import build_suffix_data
+    from repro.data.collections import SyntheticSpec, generate
+
+    coll = generate(
+        SyntheticSpec("version", n_base=2, n_variants=4, base_len=60,
+                      mutation_rate=0.01, seed=7)
+    )
+    csa = build_csa(build_suffix_data(coll))
+    pats = jnp.asarray(RNG.integers(0, coll.sigma, (8, 16)), jnp.int32)
+    lens = jnp.asarray(RNG.integers(0, 17, 8), jnp.int32)
+
+    kern = lambda p, l: csa_search_planned(  # noqa: E731
+        csa, p, l, use_kernel=True, interpret=True
+    )
+    fall = lambda p, l: csa_search_planned(csa, p, l, use_kernel=False)  # noqa: E731
+    assert count_eqns(jax.make_jaxpr(kern)(pats, lens).jaxpr, "pallas_call") == 1
+    assert count_eqns(jax.make_jaxpr(fall)(pats, lens).jaxpr, "pallas_call") == 0
+
+    lo_k, hi_k = kern(pats, lens)
+    lo_f, hi_f = fall(pats, lens)
+    np.testing.assert_array_equal(np.asarray(lo_k), np.asarray(lo_f))
+    np.testing.assert_array_equal(np.asarray(hi_k), np.asarray(hi_f))
+
+
+def test_pair_descent_halves_gathers():
+    """The XLA fallback contract: a fused (lo, hi) pair descent issues half
+    the per-level rank gathers of two independent wm_rank_batch descents."""
+    from repro.succinct.wavelet import wm_rank_batch, wm_rank_pair_batch
+
+    _, wm, _, _ = _bws_index(600, 13, seed=3)
+    c = jnp.asarray(RNG.integers(0, 13, 64), jnp.int32)
+    lo = jnp.asarray(RNG.integers(0, 300, 64), jnp.int32)
+    hi = jnp.asarray(RNG.integers(300, 601, 64), jnp.int32)
+
+    pair = jax.make_jaxpr(lambda c, a, b: wm_rank_pair_batch(wm, c, a, b))(
+        c, lo, hi
+    )
+    dual = jax.make_jaxpr(
+        lambda c, a, b: (wm_rank_batch(wm, c, a), wm_rank_batch(wm, c, b))
+    )(c, lo, hi)
+    g_pair = count_eqns(pair.jaxpr, "gather")
+    g_dual = count_eqns(dual.jaxpr, "gather")
+    # pair: 2 rank gathers/level + one sym_starts lookup outside the loop;
+    # dual: 4 rank gathers/level (each wm_rank carries a (start, end) pair)
+    assert g_pair * 2 <= g_dual + 2, (g_pair, g_dual)
+
+    # and the integers agree with the classic descent
+    rl_p, rh_p = wm_rank_pair_batch(wm, c, lo, hi)
+    np.testing.assert_array_equal(
+        np.asarray(rl_p), np.asarray(wm_rank_batch(wm, c, lo))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rh_p), np.asarray(wm_rank_batch(wm, c, hi))
+    )

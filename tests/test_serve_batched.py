@@ -14,7 +14,7 @@ from repro.serve.planner import (
     ENGINE_ILCP,
     ENGINE_PDL,
 )
-from repro.serve.retrieval import RetrievalService
+from repro.serve.retrieval import BRUTE_WINDOW_FLOOR, RetrievalService
 
 MAX_BUF = 512
 
@@ -85,6 +85,38 @@ def test_missing_pattern_is_empty(svc_pats):
     assert int(svc.count(batch)[1]) == 0 and int(svc.count(batch)[3]) == 0
 
 
+def test_search_kernel_path_parity():
+    """The fused Pallas backward-search path (use_search_kernel=True,
+    interpret mode on CPU) must be bit-identical to engine="reference",
+    including missing patterns (out-of-alphabet symbol) and empty rows."""
+    coll = generate(SPECS["version"])
+    svc = RetrievalService.build(
+        coll, block_size=16, beta=8.0, use_search_kernel=True
+    )
+    assert svc.use_search_kernel
+    pats = random_substring_patterns(coll, 60, 5, 24)
+    bogus = np.full(6, coll.sigma + 3, np.int32)
+    batch = pats[:12] + [bogus, np.zeros(0, np.int32)]
+
+    got = svc.list_docs(batch, max_df=64, max_buf=MAX_BUF)
+    ref = svc.list_docs(batch, max_df=64, engine="reference", max_buf=MAX_BUF)
+    assert got == ref
+    assert got[-2] == [] and got[-1] == []
+
+    assert svc.topk(batch, k=5, max_buf=MAX_BUF) == svc.topk(
+        batch, k=5, engine="reference", max_buf=MAX_BUF
+    )
+    assert np.array_equal(svc.count(batch), svc.count_ilcp(batch))
+
+    # plan parity against a kernel-free service over the same collection
+    plain = RetrievalService.build(
+        coll, block_size=16, beta=8.0, use_search_kernel=False
+    )
+    pk, pf = svc.plan(batch), plain.plan(batch)
+    for name in ("lo", "hi", "occ", "df", "engine"):
+        assert np.array_equal(pk[name], pf[name]), name
+
+
 def test_plan_engine_assignment(svc_pats):
     svc, pats = svc_pats
     plan = svc.plan(pats[:12])
@@ -123,7 +155,11 @@ def test_one_compile_per_bucket():
         SyntheticSpec("version", n_base=2, n_variants=5, base_len=80,
                       mutation_rate=0.01, seed=11)
     )
-    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    # brute_window pinned: the dispatch-aware auto window is allowed its own
+    # (bounded) recompiles and has a dedicated test below
+    svc = RetrievalService.build(
+        coll, block_size=16, beta=8.0, brute_window=MAX_BUF
+    )
     pats = random_substring_patterns(coll, 200, 5, 16)
     assert len(pats) >= 9
 
@@ -166,6 +202,48 @@ def test_one_compile_per_bucket():
     svc.tfidf([[pats[0], pats[1]]], k=3, max_buf=MAX_BUF)
     svc.tfidf([[pats[2]]], k=3, max_buf=MAX_BUF)
     assert svc.compile_counts["tfidf"] == 1
+
+
+def test_auto_brute_window():
+    """Dispatch-aware Brute-L window: sized per compile bucket from planner
+    occ stats, power-of-two, clamped to [floor, max_buf], grow-only — and
+    results stay bit-identical to the reference path."""
+    coll = generate(
+        SyntheticSpec("version", n_base=2, n_variants=5, base_len=80,
+                      mutation_rate=0.01, seed=11)
+    )
+    svc = RetrievalService.build(coll, block_size=16, beta=8.0)
+    assert svc.brute_window is None
+    pats = random_substring_patterns(coll, 100, 4, 12)
+    assert len(pats) >= 9
+
+    got = svc.list_docs(pats[:8], max_df=32, max_buf=MAX_BUF)
+    ref = svc.list_docs(pats[:8], max_df=32, engine="reference",
+                        max_buf=MAX_BUF)
+    assert got == ref
+    wins = list(svc._brute_windows.values())
+    assert wins, "auto window was never recorded"
+    assert all(w & (w - 1) == 0 for w in wins), "windows must be powers of 2"
+    assert all(BRUTE_WINDOW_FLOOR <= w <= MAX_BUF for w in wins)
+
+    # grow-only per bucket: a lighter batch in the same bucket never shrinks
+    # the window (so it never recompiles downward)
+    before = dict(svc._brute_windows)
+    compiles = svc.compile_counts.get("list", 0)
+    svc.list_docs(pats[1:9], max_df=32, max_buf=MAX_BUF)
+    for key, win in before.items():
+        assert svc._brute_windows[key] >= win
+    assert svc.compile_counts["list"] <= compiles + 1
+
+    # forcing brute routes every nonempty query through the sized window;
+    # parity with the reference loop proves the window never truncates
+    gb = svc.list_docs(pats[:8], max_df=32, engine="brute", max_buf=MAX_BUF)
+    rb = svc.list_docs(pats[:8], max_df=32, engine="reference:brute",
+                       max_buf=MAX_BUF)
+    assert gb == rb
+    gt = svc.topk(pats[:8], k=4, engine="brute", max_buf=MAX_BUF)
+    rt = svc.topk(pats[:8], k=4, engine="reference:brute", max_buf=MAX_BUF)
+    assert gt == rt
 
 
 def test_empty_batch():

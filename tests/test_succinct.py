@@ -154,6 +154,44 @@ def test_wavelet_rank_access(sigma):
         np.testing.assert_array_equal(np.asarray(r), exp)
 
 
+@pytest.mark.parametrize("sigma", [2, 5, 16, 37])
+def test_wavelet_pair_descent(sigma):
+    """sym_starts / wm_descend / wm_rank_pair against ground truth: the
+    precomputed block start makes rank_c one carried position per query,
+    and the fused pair matches two independent classic ranks."""
+    from repro.succinct.wavelet import wm_descend, wm_rank_pair
+
+    n = 350
+    seq = RNG.integers(0, sigma, n)
+    wm = wm_build(seq, sigma)
+
+    # sym_starts[c] is the descent of position 0 along c's bit path
+    starts = np.asarray(wm.sym_starts)
+    assert starts.shape == (sigma,)
+    for c in range(sigma):
+        assert int(wm_descend(wm, c, 0)) == starts[c]
+
+    # scalar: rank via descend-minus-start, pair == two classic ranks
+    for c in (0, sigma // 2, sigma - 1):
+        for lo, hi in [(0, 0), (0, n), (3, n // 2), (n // 3, n)]:
+            truth_lo = int(np.sum(seq[:lo] == c))
+            truth_hi = int(np.sum(seq[:hi] == c))
+            assert int(wm_descend(wm, c, lo)) - starts[c] == truth_lo
+            a, b = wm_rank_pair(wm, c, lo, hi)
+            assert (int(a), int(b)) == (truth_lo, truth_hi)
+
+    # batched (elementwise arrays), against wm_rank
+    B = 64
+    c = jnp.asarray(RNG.integers(0, sigma, B), jnp.int32)
+    lo = jnp.asarray(RNG.integers(0, n // 2, B), jnp.int32)
+    hi = jnp.asarray(RNG.integers(0, n + 1, B), jnp.int32)
+    a, b = wm_rank_pair(wm, c, lo, hi)
+    exp_a = jax.vmap(lambda cc, i: wm_rank(wm, cc, i))(c, lo)
+    exp_b = jax.vmap(lambda cc, i: wm_rank(wm, cc, i))(c, hi)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(exp_a))
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(exp_b))
+
+
 def test_wavelet_count_less():
     sigma = 13
     n = 300
