@@ -12,7 +12,17 @@ per-path comparison).  Emits the usual CSV rows plus a dry-run-shaped JSON
 the perf trajectory can track serving throughput next to the roofline
 numbers.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--out experiments/BENCH_serve.json]
+A second section exercises the *resilient runtime* (``repro.serve.runtime``)
+under deterministic fault injection: a 512-query workload is pushed through
+``ServeRuntime`` while executor failures, hangs, and compile errors fire at
+a seeded 10% rate, and the run must answer 100% of valid requests (degraded
+answers flagged) with no deadline missed by more than one batch interval.
+The JSON gains a ``"resilience"`` block with ``degraded_fraction`` and
+``deadline_miss_rate``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        [--out experiments/BENCH_serve.json] \
+        [--inject executor_fail,slow_pdl,compile_error]
 """
 
 from __future__ import annotations
@@ -26,10 +36,14 @@ import numpy as np
 
 from benchmarks.common import bench_collections, emit
 from repro.data.collections import random_substring_patterns
+from repro.serve import faults
 from repro.serve.retrieval import RetrievalService
+from repro.serve.runtime import RuntimeConfig, ServeRuntime
 
 BATCH_SIZES = (1, 16, 128)
 ITERS = 20
+RESILIENCE_QUERIES = 512
+DEFAULT_INJECT = "executor_fail,slow_pdl,compile_error"
 
 
 def _timed(fn, iters: int = ITERS, warmup: int = 1):
@@ -47,9 +61,88 @@ def _timed(fn, iters: int = ITERS, warmup: int = 1):
     return float(np.percentile(ms, 50)), float(np.percentile(ms, 99)), float(ms.mean())
 
 
+def run_resilience(collection: str = "version-p001",
+                   inject: str = DEFAULT_INJECT, rate: float = 0.1,
+                   n_queries: int = RESILIENCE_QUERIES, batch: int = 8,
+                   deadline_s: float = 0.5, seed: int = 0) -> dict:
+    """Push ``n_queries`` through ServeRuntime with faults firing at
+    ``rate`` and report the resilience contract's metrics."""
+    coll = bench_collections()[collection]
+    # pin the Brute-L window: the grow-only dispatch-aware sizing would
+    # recompile a bucket mid-run when a higher-occ pattern shows up, and
+    # those compiles would read as deadline misses rather than resilience
+    svc = RetrievalService.build(coll, block_size=32, beta=8.0,
+                                 brute_window=512)
+    workload = random_substring_patterns(coll, max(n_queries, 64), 6, 64)
+    rng = np.random.default_rng(seed)
+    rt = ServeRuntime(svc, RuntimeConfig(max_batch=batch,
+                                         default_deadline_s=deadline_s))
+    kinds = ("count", "list", "topk")
+    rt.warmup(kinds=kinds, batch_sizes=(batch,))
+    # a realistic warm wave per kind: settles the grow-only brute windows
+    # (which recompile the bucket) and seeds the steady-state EMA, so the
+    # measured run sees no in-flight compiles
+    for kind in kinds:
+        for _ in range(2):
+            rt.serve([(kind, workload[int(i)])
+                      for i in rng.integers(0, len(workload), size=batch)],
+                     deadline_s=1e9)
+    specs = faults.parse_fault_specs(inject, rate=rate, seed=seed)
+    # workload-only baselines: warmup traffic above must not dilute the
+    # resilience metrics
+    m = rt.metrics
+    base_submitted, base_answered = m.submitted, m.answered
+    base_degraded, base_misses = m.degraded, m.deadline_misses
+    served = 0
+    batch_lat = []
+    with faults.inject(*specs) as inj:
+        while served < n_queries:
+            # one kind per submission wave, so batches cut at the warmed
+            # power-of-two bucket instead of fragmenting across kinds
+            kind = kinds[(served // batch) % len(kinds)]
+            take = min(batch, n_queries - served)
+            t0 = time.perf_counter()
+            for i in rng.integers(0, len(workload), size=take):
+                rt.submit(kind, workload[int(i)])
+                served += 1
+            rt.run_until_idle()
+            batch_lat.append(time.perf_counter() - t0)
+    answered = m.answered - base_answered
+    submitted = m.submitted - base_submitted
+    interval_s = float(np.percentile(np.asarray(batch_lat), 99))
+    res = {
+        "collection": collection,
+        "inject": inject,
+        "fault_rate": rate,
+        "faults_fired": len(inj.fired),
+        "queries": n_queries,
+        "answered": answered,
+        "answered_fraction": round(answered / submitted, 4),
+        "degraded_fraction": round((m.degraded - base_degraded) / answered, 4),
+        "deadline_miss_rate": round(
+            (m.deadline_misses - base_misses) / answered, 4),
+        "max_overrun_s": round(m.max_overrun_s, 4),
+        "batch_interval_s": round(interval_s, 4),
+        "overrun_within_one_interval": bool(m.max_overrun_s <= interval_s),
+        "retries": m.retries,
+        "breaker_trips": m.breaker_trips,
+        "degrade_reasons": dict(m.degrade_reasons),
+        "compile_s": m.as_dict()["compile_s"],
+        "steady_ema_s": m.as_dict()["steady_ema_s"],
+    }
+    print("resilience:", json.dumps(res, indent=1))
+    assert res["answered_fraction"] == 1.0, "runtime dropped valid requests"
+    assert res["overrun_within_one_interval"], (
+        f"deadline missed by {m.max_overrun_s:.3f}s > one batch interval "
+        f"{interval_s:.3f}s"
+    )
+    return res
+
+
 def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         k: int = 10, max_df: int = 128, max_buf: int = 1024,
-        out: str | None = None, iters: int = ITERS):
+        out: str | None = None, iters: int = ITERS,
+        inject: str = DEFAULT_INJECT, resilience_queries: int = RESILIENCE_QUERIES):
     rows, results = [], []
     for name in collections:
         coll = bench_collections()[name]
@@ -95,10 +188,13 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
                     }
                 )
     emit(rows, ["collection", "endpoint", "batch", "p50_ms", "p99_ms", "qps"])
+    resilience = run_resilience(collection=collections[0], inject=inject,
+                                n_queries=resilience_queries)
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
-            json.dump({"results": results, "failures": []}, f, indent=1)
+            json.dump({"results": results, "resilience": resilience,
+                       "failures": []}, f, indent=1)
         print(f"wrote {out}")
     return rows
 
@@ -107,14 +203,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/BENCH_serve.json")
     ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--inject", default=DEFAULT_INJECT,
+                    help="fault specs for the resilience section "
+                         "(repro.serve.faults names, 'name[:rate]' comma list)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one collection, tiny batches, 3 iters")
     args = ap.parse_args()
     if args.smoke:
         run(collections=("version-p001",), batch_sizes=(1, 16), iters=3,
-            out=args.out)
+            out=args.out, inject=args.inject, resilience_queries=128)
     else:
-        run(batch_sizes=tuple(args.batches), out=args.out)
+        run(batch_sizes=tuple(args.batches), out=args.out, inject=args.inject)
 
 
 if __name__ == "__main__":

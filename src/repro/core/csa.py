@@ -99,6 +99,25 @@ def build_csa(data: SuffixData, sample_rate: int = 16) -> CSA:
 # ---------------------------------------------------------------------------
 
 
+def csa_symbol_bounds(csa: CSA, c):
+    """Input hardening for one backward-search step (shared by every search
+    path — the scalar scan, the batched pair descent, and the reference
+    loop all route through this one validator).
+
+    A symbol outside ``[0, sigma)`` cannot occur: the range collapses to
+    the empty range at the symbol's lexicographic insertion point (0 below
+    the alphabet, n above it), matching the host binary search's
+    convention, and the clamped symbol ``cc`` keeps every downstream gather
+    in bounds.  Returns ``(cc, c_ok, oob)``: the clamped symbol, the
+    validity mask, and the collapse point.
+    """
+    c = as_i32(c)
+    c_ok = (c >= 0) & (c < csa.sigma)
+    cc = jnp.clip(c, 0, csa.sigma - 1)
+    oob = jnp.where(c < 0, 0, csa.n).astype(IDX)
+    return cc, c_ok, oob
+
+
 def csa_search(csa: CSA, pattern, length):
     """SA range [lo, hi) of suffixes prefixed by ``pattern[:length]``.
 
@@ -115,12 +134,7 @@ def csa_search(csa: CSA, pattern, length):
         j = length - 1 - t
         active = (t < length) & (lo < hi)
         c = pattern[jnp.clip(j, 0, max_m - 1)]
-        # out-of-alphabet symbols cannot occur: collapse to the empty range
-        # at the symbol's lexicographic insertion point (0 below, n above),
-        # matching the host binary search's convention
-        c_ok = (c >= 0) & (c < csa.sigma)
-        cc = jnp.clip(c, 0, csa.sigma - 1)
-        oob = jnp.where(c < 0, 0, csa.n)
+        cc, c_ok, oob = csa_symbol_bounds(csa, c)
         nlo = jnp.where(c_ok, csa.counts[cc] + wm_rank(csa.wm, cc, lo), oob)
         nhi = jnp.where(c_ok, csa.counts[cc] + wm_rank(csa.wm, cc, hi), oob)
         lo = jnp.where(active, nlo, lo)
@@ -181,12 +195,7 @@ def csa_search_planned(csa: CSA, patterns, lengths, *, use_kernel: bool | None =
         j = lengths - 1 - t
         active = (t < lengths) & (lo < hi)
         c = patterns[rows, jnp.clip(j, 0, max_m - 1)]
-        # out-of-alphabet symbols cannot occur: collapse to the empty range
-        # at the symbol's lexicographic insertion point (0 below, n above),
-        # matching the host binary search's convention
-        c_ok = (c >= 0) & (c < csa.sigma)
-        cc = jnp.clip(c, 0, csa.sigma - 1)
-        oob = jnp.where(c < 0, 0, csa.n)
+        cc, c_ok, oob = csa_symbol_bounds(csa, c)
         rlo, rhi = wm_rank_pair_batch(csa.wm, cc, lo, hi)
         lo = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rlo, oob), lo)
         hi = jnp.where(active, jnp.where(c_ok, csa.counts[cc] + rhi, oob), hi)

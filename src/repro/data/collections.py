@@ -20,6 +20,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.suffix import Collection, concat_documents
+from repro.errors import InvalidQueryError
 
 DNA = "acgt"
 
@@ -119,6 +120,63 @@ def random_substring_patterns(
         scored.append((occ / df, pat))
     scored.sort(key=lambda t: -t[0])
     return [pat for _, pat in scored[:keep]]
+
+
+def normalize_patterns(patterns, *, sigma: int | None = None,
+                       max_len: int | None = None):
+    """The single input-hardening gate for every query endpoint.
+
+    Replaces the ad-hoc checks that used to live in ``serve.retrieval`` and
+    ``core.csa``: every pattern becomes a 1-D int32 array, and the contract
+    splits cleanly in two:
+
+    * **structurally bad** input — ``None``, floats, nested/2-D payloads,
+      arbitrary objects — raises :class:`repro.errors.InvalidQueryError`
+      at admission time (a request, not a pattern);
+    * **soft-invalid** input — empty patterns, patterns longer than
+      ``max_len`` (the largest serving length bucket), symbols outside
+      ``[0, sigma)`` — normalizes to a zero-length pattern, which flows
+      through the engines as an empty SA range and reports empty/zero
+      results.  Never a trace error, never an out-of-bounds gather.
+
+    ``str``/``bytes`` patterns are mapped byte-wise to ``[1, 256]``, the
+    same convention ``concat_documents`` applies to string documents.
+    Returns a list of 1-D ``np.int32`` arrays of the same length as
+    ``patterns``.
+    """
+    _empty = np.zeros(0, np.int32)
+    out = []
+    for i, p in enumerate(patterns):
+        if isinstance(p, str):
+            a = np.frombuffer(p.encode("utf-8"), dtype=np.uint8).astype(np.int32) + 1
+        elif isinstance(p, (bytes, bytearray)):
+            a = np.frombuffer(bytes(p), dtype=np.uint8).astype(np.int32) + 1
+        else:
+            try:
+                a = np.asarray(p)
+            except Exception as e:
+                raise InvalidQueryError(
+                    f"pattern {i}: not convertible to an array ({type(p).__name__})"
+                ) from e
+            if a.ndim != 1:
+                raise InvalidQueryError(
+                    f"pattern {i}: expected a 1-D symbol sequence, got shape"
+                    f" {a.shape}"
+                )
+            if a.size and a.dtype.kind not in "iu":
+                raise InvalidQueryError(
+                    f"pattern {i}: expected integer symbols or str, got dtype"
+                    f" {a.dtype}"
+                )
+            a = a.astype(np.int32, copy=False)
+        if max_len is not None and a.size > max_len:
+            a = _empty          # longer than any length bucket: cannot serve
+        elif sigma is not None and a.size and (
+            (a < 0).any() or (a >= sigma).any()
+        ):
+            a = _empty          # out-of-alphabet symbol: zero occurrences
+        out.append(a)
+    return out
 
 
 def pad_patterns(patterns, max_m: int | None = None):

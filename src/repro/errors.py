@@ -1,0 +1,66 @@
+"""Error taxonomy shared by the core structures and the serving stack.
+
+The split the resilient runtime (repro.serve.runtime) relies on:
+
+* ``InvalidQueryError`` — the *request* is structurally broken (not a
+  pattern at all).  Raised at admission time, never from inside a compiled
+  program; soft-invalid input (empty pattern, over-long pattern,
+  out-of-alphabet symbols) is NOT an error — it normalizes to an empty
+  query that flows through the engine and reports empty results.
+* ``TransientExecutionError`` — the request was fine but this *attempt*
+  failed (device error, injected fault, poisoned payload).  Retryable;
+  repeated occurrences trip the circuit breaker and degrade the answer.
+* ``DeadlineExceeded`` — the per-request deadline passed; the runtime
+  converts this into a degraded (empty) answer rather than raising to the
+  caller.
+* ``IndexIntegrityError`` — the index pytrees violate a structural
+  invariant (repro.serve.validate); the index must be rejected at
+  build/load time, never served.
+* ``QueueFullError`` — bounded admission queue overflow; the only
+  load-shedding signal the runtime surfaces to callers as an exception.
+"""
+
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Base class for all typed errors raised by this package."""
+
+
+class InvalidQueryError(ReproError, ValueError):
+    """Request is structurally malformed (non-pattern payload, bad dtype,
+    bad nesting) — rejected at admission, before any device work."""
+
+
+class TransientExecutionError(ReproError):
+    """A single execution attempt failed; the request itself may be fine.
+
+    The runtime retries these with backoff; attempts exhausted count as a
+    circuit-breaker failure and route the request to a degraded path."""
+
+
+class FaultInjectedError(TransientExecutionError):
+    """Raised by repro.serve.faults at an instrumented site."""
+
+    def __init__(self, site: str, ordinal: int):
+        super().__init__(f"injected fault at {site} (firing #{ordinal})")
+        self.site = site
+        self.ordinal = ordinal
+
+
+class PoisonedResultError(TransientExecutionError):
+    """An executor returned a payload violating the serving contract
+    (sentinels out of range, counts out of bounds) — treated exactly like
+    an execution failure so corrupted answers are never served."""
+
+
+class DeadlineExceeded(ReproError, TimeoutError):
+    """The request's deadline passed before a full answer was produced."""
+
+
+class IndexIntegrityError(ReproError):
+    """An index pytree violates a structural invariant and must not serve."""
+
+
+class QueueFullError(ReproError):
+    """Bounded admission queue is full; the request was not admitted."""

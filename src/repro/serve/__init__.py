@@ -1,6 +1,20 @@
 """Serving layer: batched document-retrieval service (the paper's indexes
-as a first-class serving feature) and LM decode serving."""
+as a first-class serving feature), the resilient request runtime wrapped
+around it (deadlines, retries, circuit breaking, graceful degradation),
+deterministic fault injection, and index integrity validation."""
 
 from repro.serve.retrieval import RetrievalService
+from repro.serve.runtime import (
+    Answer,
+    CircuitBreaker,
+    RuntimeConfig,
+    ServeRuntime,
+)
 
-__all__ = ["RetrievalService"]
+__all__ = [
+    "Answer",
+    "CircuitBreaker",
+    "RetrievalService",
+    "RuntimeConfig",
+    "ServeRuntime",
+]

@@ -76,7 +76,8 @@ from repro.core.pdl import (
 from repro.core.sada import build_sada, sada_count_batch
 from repro.core.suffix import Collection, build_suffix_data
 from repro.core.tfidf import term_ranges_batch, tfidf_topk_batch
-from repro.data.collections import pad_patterns
+from repro.data.collections import normalize_patterns, pad_patterns
+from repro.serve import faults
 from repro.serve.planner import (
     ENGINE_BRUTE,
     ENGINE_CODES,
@@ -109,6 +110,11 @@ def _bucket_len(m: int) -> int:
 #: to the endpoint's ``max_buf``, so each bucket recompiles at most
 #: lg(max_buf / floor) times as traffic reveals larger brute ranges.
 BRUTE_WINDOW_FLOOR = 32
+
+#: largest servable pattern-length bucket.  Patterns longer than this never
+#: reach the device: ``normalize_patterns`` collapses them to empty queries
+#: (empty results), so one absurd request cannot force a giant compile.
+MAX_PATTERN_LEN = 4096
 
 
 def _pow2_ceil(x: int) -> int:
@@ -222,6 +228,9 @@ class RetrievalService:
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
     _brute_windows: dict = dataclasses.field(default_factory=dict, repr=False)
     compile_counts: dict = dataclasses.field(default_factory=dict, repr=False)
+    #: per-structure CRC32s recorded by build-time validation (``repro.
+    #: serve.validate``); a load path compares them via verify_fingerprints
+    fingerprints: dict = dataclasses.field(default_factory=dict, repr=False)
 
     # -- construction --------------------------------------------------------
 
@@ -231,13 +240,14 @@ class RetrievalService:
         sada_variant: str = "sparse", sample_rate: int = 16,
         use_search_kernel: bool | None = None,
         brute_window: int | None = None,
+        validate: bool = True,
     ):
         data = build_suffix_data(coll)
         if use_search_kernel is None:
             # backend auto-detection: the fused backward-search kernel is
             # the default on TPU; elsewhere the XLA pair descent wins
             use_search_kernel = jax.default_backend() == "tpu"
-        return cls(
+        svc = cls(
             coll=coll,
             csa=build_csa(data, sample_rate=sample_rate),
             ilcp=build_ilcp(data),
@@ -248,6 +258,13 @@ class RetrievalService:
             use_search_kernel=use_search_kernel,
             brute_window=brute_window,
         )
+        if validate:
+            # structural invariants + checksums: a corrupted index is
+            # rejected here, before it can serve wrong answers
+            from repro.serve.validate import validate_service
+
+            svc.fingerprints.update(validate_service(svc))
+        return svc
 
     # -- compile cache -------------------------------------------------------
 
@@ -258,13 +275,22 @@ class RetrievalService:
         key = (kind, statics)
         exe = self._cache.get(key)
         if exe is None:
+            faults.fire(f"compile:{kind}")
             exe = jax.jit(build_fn()).lower(*args).compile()
             self._cache[key] = exe
             self.compile_counts[kind] = self.compile_counts.get(kind, 0) + 1
         return exe
 
     def _pad_batch(self, patterns):
-        """Dense [B_bucket, m_bucket] pattern batch + lengths + true size."""
+        """Dense [B_bucket, m_bucket] pattern batch + lengths + true size.
+
+        Every pattern passes the unified input gate first (see
+        ``normalize_patterns``): structurally bad input raises
+        InvalidQueryError; empty / over-long / out-of-alphabet patterns
+        become empty queries with empty results."""
+        patterns = normalize_patterns(
+            patterns, sigma=self.coll.sigma, max_len=MAX_PATTERN_LEN
+        )
         pats, lens = pad_patterns(patterns)
         B, m = pats.shape
         Bb, mb = _bucket_batch(B), _bucket_len(m)
@@ -310,6 +336,7 @@ class RetrievalService:
         engine), trimmed to the true batch size."""
         pats, lens, B = self._pad_batch(patterns)
         thresh, forced = self._knobs(engine)
+        faults.fire("plan")
         exe = self._compiled(
             "plan", (pats.shape,),
             lambda: functools.partial(_plan_program, self.use_search_kernel),
@@ -323,11 +350,19 @@ class RetrievalService:
 
     def ranges(self, patterns):
         p = self.plan(patterns)
-        lens = np.asarray([len(x) for x in patterns], np.int32)
+        norm = normalize_patterns(
+            patterns, sigma=self.coll.sigma, max_len=MAX_PATTERN_LEN
+        )
+        lens = np.asarray([len(x) for x in norm], np.int32)
         return p["lo"], p["hi"], lens
 
-    def count(self, patterns):
-        """df per pattern (Sada variant; ILCP counting cross-checks)."""
+    def count(self, patterns, engine: str = "auto"):
+        """df per pattern (Sada variant; ILCP counting cross-checks).
+
+        ``engine="reference"`` computes the same counts through the
+        per-query host path — the runtime's last-resort degradation."""
+        if engine.startswith("reference"):
+            return self._ranges_dfs(patterns)[2]
         return self.plan(patterns)["df"]
 
     def count_ilcp(self, patterns):
@@ -349,6 +384,7 @@ class RetrievalService:
         win = self._brute_window_for(
             "list", (pats.shape, max_df, max_buf), patterns, engine, max_buf
         )
+        faults.fire("executor:list")
         args = (self.csa, self.ilcp, self.pdl_list, self.da, self.sada,
                 pats, lens, thresh, forced)
         exe = self._compiled(
@@ -359,7 +395,9 @@ class RetrievalService:
             args,
         )
         docs, cnt, _plan = exe(*args)
-        return np.asarray(docs)[:B], np.asarray(cnt)[:B]
+        return faults.poison(
+            "executor:list", (np.asarray(docs)[:B], np.asarray(cnt)[:B])
+        )
 
     def list_docs(self, patterns, max_df: int = 256, engine: str = "auto",
                   max_buf: int = 4096):
@@ -386,6 +424,7 @@ class RetrievalService:
         win = self._brute_window_for(
             "topk", (pats.shape, k, max_buf), patterns, engine, max_buf
         )
+        faults.fire("executor:topk")
         args = (self.csa, self.pdl_topk, self.sada, pats, lens, thresh, forced)
         exe = self._compiled(
             "topk", (pats.shape, k, max_df, win, max_buf),
@@ -395,7 +434,9 @@ class RetrievalService:
             args,
         )
         docs, tfs, _plan = exe(*args)
-        return np.asarray(docs)[:B], np.asarray(tfs)[:B]
+        return faults.poison(
+            "executor:topk", (np.asarray(docs)[:B], np.asarray(tfs)[:B])
+        )
 
     def topk(self, patterns, k: int = 10, engine: str = "auto",
              max_buf: int = 4096):
@@ -415,19 +456,24 @@ class RetrievalService:
         Q = len(queries)
         if Q == 0:
             return np.zeros((0, k), np.int32), np.zeros((0, k), np.float32)
-        m = max(
-            (len(t) for terms in queries for t in terms[:max_terms]), default=1
-        )
-        Qb, mb = _bucket_batch(Q), _bucket_len(m)
+        queries = [
+            normalize_patterns(
+                list(terms)[:max_terms], sigma=self.coll.sigma,
+                max_len=MAX_PATTERN_LEN,
+            )
+            for terms in queries
+        ]
+        m = max((len(t) for terms in queries for t in terms), default=1)
+        Qb, mb = _bucket_batch(Q), _bucket_len(max(m, 1))
         pats = np.zeros((Qb, max_terms, mb), np.int32)
         lens = np.zeros((Qb, max_terms), np.int32)
         for qi, terms in enumerate(queries):
-            for ti, t in enumerate(terms[:max_terms]):
-                t = np.asarray(t, np.int32)[:mb]
+            for ti, t in enumerate(terms):
                 pats[qi, ti, : len(t)] = t
                 lens[qi, ti] = len(t)
         pats = jnp.asarray(pats)
         lens = jnp.asarray(lens)
+        faults.fire("executor:tfidf")
         args = (self.csa, self.pdl_topk, self.sada, pats, lens)
         exe = self._compiled(
             "tfidf", (pats.shape, k, conjunctive, max_buf),
@@ -435,7 +481,9 @@ class RetrievalService:
             args,
         )
         docs, scores = exe(*args)
-        return np.asarray(docs)[:Q], np.asarray(scores)[:Q]
+        return faults.poison(
+            "executor:tfidf", (np.asarray(docs)[:Q], np.asarray(scores)[:Q])
+        )
 
     def tfidf(self, queries, k: int = 10, conjunctive: bool = False,
               max_terms: int = 4, max_buf: int = 2048, engine: str = "auto"):
@@ -456,6 +504,11 @@ class RetrievalService:
         return "brute" if occ < self.occ_df_threshold * max(df, 1) else "pdl"
 
     def _ranges_dfs(self, patterns):
+        # same input gate as the batched path (_pad_batch) so the reference
+        # oracle and the planned pipeline agree on hardened inputs
+        patterns = normalize_patterns(
+            patterns, sigma=self.coll.sigma, max_len=MAX_PATTERN_LEN
+        )
         pats, lens = pad_patterns(patterns)
         from repro.core.csa import csa_search_batch
 

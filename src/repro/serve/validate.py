@@ -1,0 +1,355 @@
+"""Index integrity validation — reject a corrupted index before it serves.
+
+A serving process that loads (or is handed) corrupted index pytrees does
+not crash: succinct structures are all gathers and prefix sums, so a
+flipped word or a truncated offset array silently yields *wrong answers*.
+This module checks the structural invariants the query algorithms assume,
+at build/load time, and raises :class:`repro.errors.IndexIntegrityError`
+on the first violation:
+
+* bitvectors: rank metadata (``ones_prefix``) recomputed exactly from the
+  words; padding bits beyond ``n`` must be zero; sparse positions strictly
+  increasing and in range; RLE runs tile ``[0, n)`` with a consistent ones
+  prefix;
+* wavelet matrices: per-level zero counts consistent with the level
+  popcounts, and ``sym_starts`` re-derived by the full per-symbol descent
+  (the pair-descent rank and the fused backward-search kernel both lean on
+  it — a wrong entry mis-ranks every query);
+* CSA: the C array monotone with ``C[0] = 0`` and ``C[1] = d`` (one
+  terminator per document); a device spot check that the wavelet matrix's
+  symbol histogram matches the C array deltas; SA samples in range and
+  aligned with the sampled-positions bitvector;
+* ILCP: run boundaries strictly increasing and tiling ``[0, n)``; maximal
+  runs (adjacent head values differ); the value-sorted cumulative lengths
+  ending at ``n``; the RMQ table built over exactly the run-head values;
+* PDL: leaf tiling of the SA; monotone set offsets ending at ``|A|``;
+  grammar symbols in ``[0, d + nrules]``; strictly increasing top-k
+  frequency cumulatives;
+* Sada: the unary H' encoding consistent with the variant's filter
+  bitvectors and slot count.
+
+``fingerprint_service`` additionally checksums every array leaf (CRC32),
+so a load path can detect bit-level corruption that happens to satisfy the
+structural invariants; ``RetrievalService.build(validate=True)`` (the
+default) runs the full validation once and stores the fingerprints.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+import jax
+
+from repro.errors import IndexIntegrityError
+from repro.succinct.bitvector import (
+    PlainBitvector,
+    RLEBitvector,
+    SparseBitvector,
+)
+from repro.succinct.wavelet import WaveletMatrix
+
+
+def _req(cond: bool, name: str, msg: str) -> None:
+    if not cond:
+        raise IndexIntegrityError(f"{name}: {msg}")
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+def _word_popcounts(words: np.ndarray) -> np.ndarray:
+    flat = np.ascontiguousarray(words, dtype=np.uint32)
+    return np.unpackbits(flat.view(np.uint8)).reshape(*flat.shape, 32).sum(
+        axis=-1, dtype=np.int64
+    )
+
+
+def _unpacked_bits(words: np.ndarray) -> np.ndarray:
+    """Word array -> flat 0/1 bit array, LSB-first within each 32-bit word
+    (the pack_bits_np layout)."""
+    flat = np.ascontiguousarray(words, dtype=np.uint32)
+    le = flat.view(np.uint8)
+    if flat.dtype.byteorder == ">" or (flat.dtype.byteorder == "=" and
+                                       np.little_endian is False):
+        le = le.reshape(-1, 4)[:, ::-1].ravel()
+    return np.unpackbits(le, bitorder="little")
+
+
+# ---------------------------------------------------------------------------
+# Bitvectors
+# ---------------------------------------------------------------------------
+
+
+def validate_plain_bitvector(bv: PlainBitvector, name: str) -> None:
+    words, ones = _np(bv.words), _np(bv.ones_prefix)
+    _req(words.shape == ones.shape, name, "words/ones_prefix shape mismatch")
+    _req(words.shape[0] * 32 >= bv.n + 32, name, "missing pad word")
+    pops = _word_popcounts(words)
+    want = np.zeros_like(ones)
+    want[1:] = np.cumsum(pops[:-1])
+    _req(np.array_equal(ones, want), name, "ones_prefix != popcount prefix")
+    _req(int(ones[-1]) == bv.m, name, f"m={bv.m} != total ones {int(ones[-1])}")
+    # padding bits beyond n must be zero (rank(n) reads them masked, but
+    # select scans whole words)
+    _req(not _unpacked_bits(words)[bv.n:].any(), name, "set bits beyond n")
+    zeros = _np(bv.zeros_prefix)
+    starts = np.minimum(np.arange(len(words), dtype=np.int64) * 32, bv.n)
+    _req(np.array_equal(zeros, starts - ones), name,
+         "zeros_prefix inconsistent with ones_prefix")
+
+
+def validate_sparse_bitvector(bv: SparseBitvector, name: str) -> None:
+    pos = _np(bv.pos)
+    _req(0 <= bv.m <= bv.n, name, f"m={bv.m} out of range for n={bv.n}")
+    if bv.m == 0:
+        return  # pos holds the [n] placeholder
+    _req(pos.shape[0] == bv.m, name, f"pos has {pos.shape[0]} entries, m={bv.m}")
+    _req((np.diff(pos) > 0).all() if bv.m > 1 else True, name,
+         "positions not strictly increasing")
+    _req(0 <= int(pos[0]) and int(pos[-1]) < bv.n, name, "position out of [0, n)")
+
+
+def validate_rle_bitvector(bv: RLEBitvector, name: str) -> None:
+    rs, ones = _np(bv.run_starts), _np(bv.ones_prefix)
+    _req(rs.shape[0] == bv.nruns + 1 == ones.shape[0], name,
+         "run_starts/ones_prefix length mismatch")
+    _req(int(rs[0]) == 0 and int(rs[-1]) == bv.n, name,
+         "runs do not tile [0, n)")
+    _req((np.diff(rs) > 0).all() if bv.nruns else True, name,
+         "empty or reordered run")
+    lens = np.diff(rs)
+    vals = np.bitwise_xor(np.arange(bv.nruns) & 1, bv.first_bit)
+    want = np.concatenate([[0], np.cumsum(lens * vals)])
+    _req(np.array_equal(ones, want), name, "ones_prefix != run decode")
+    _req(int(want[-1]) == bv.m, name, f"m={bv.m} != decoded ones {int(want[-1])}")
+
+
+def _validate_any_bitvector(bv, name: str) -> None:
+    if isinstance(bv, PlainBitvector):
+        validate_plain_bitvector(bv, name)
+    elif isinstance(bv, SparseBitvector):
+        validate_sparse_bitvector(bv, name)
+    elif isinstance(bv, RLEBitvector):
+        validate_rle_bitvector(bv, name)
+    else:  # pragma: no cover - new variants must be wired in here
+        raise IndexIntegrityError(f"{name}: unknown bitvector type {type(bv)}")
+
+
+# ---------------------------------------------------------------------------
+# Wavelet matrix
+# ---------------------------------------------------------------------------
+
+
+def _wm_host_rank1(words, prefix, lvl: int, pos: np.ndarray) -> np.ndarray:
+    w = pos >> 5
+    mask = (np.uint32(1) << (pos & 31).astype(np.uint32)) - np.uint32(1)
+    masked = words[lvl][w] & mask
+    pc = np.array([int(v).bit_count() for v in masked], dtype=np.int64)
+    return prefix[lvl][w].astype(np.int64) + pc
+
+
+def validate_wavelet(wm: WaveletMatrix, name: str) -> None:
+    words, prefix, zc = _np(wm.words), _np(wm.ones_prefix), _np(wm.zcount)
+    _req(words.shape == prefix.shape and words.shape[0] == wm.levels, name,
+         "level shape mismatch")
+    _req(zc.shape[0] == wm.levels, name, "zcount length != levels")
+    pops = _word_popcounts(words)
+    want = np.zeros_like(prefix)
+    want[:, 1:] = np.cumsum(pops[:, :-1], axis=1)
+    _req(np.array_equal(prefix, want), name, "ones_prefix != popcount prefix")
+    for lvl in range(wm.levels):
+        _req(not _unpacked_bits(words[lvl])[wm.n:].any(), name,
+             f"level {lvl}: set bits beyond n")
+        total = int(prefix[lvl, -1])
+        _req(int(zc[lvl]) == wm.n - total, name,
+             f"level {lvl}: zcount {int(zc[lvl])} != n - ones {wm.n - total}")
+    # sym_starts: re-derive by the exact per-symbol descent the builder runs
+    syms = np.arange(wm.sigma, dtype=np.int64)
+    s = np.zeros(wm.sigma, dtype=np.int64)
+    for lvl in range(wm.levels):
+        bit = (syms >> (wm.levels - 1 - lvl)) & 1
+        r1 = _wm_host_rank1(words, prefix, lvl, s)
+        s = np.where(bit == 0, s - r1, zc[lvl] + r1)
+    _req(np.array_equal(_np(wm.sym_starts), s.astype(np.int32)), name,
+         "sym_starts != descent of position 0 (pair-descent rank would "
+         "mis-rank every query)")
+
+
+def wm_symbol_histogram(wm: WaveletMatrix) -> np.ndarray:
+    """Per-symbol occurrence counts decoded from the wavelet matrix alone:
+    rank_c(n) = descend(n following c) - sym_starts[c], computed on host
+    for every symbol at once (the same descent the builder runs for
+    position 0)."""
+    words, prefix, zc = _np(wm.words), _np(wm.ones_prefix), _np(wm.zcount)
+    syms = np.arange(wm.sigma, dtype=np.int64)
+    e = np.full(wm.sigma, wm.n, dtype=np.int64)
+    for lvl in range(wm.levels):
+        bit = (syms >> (wm.levels - 1 - lvl)) & 1
+        r1 = _wm_host_rank1(words, prefix, lvl, e)
+        e = np.where(bit == 0, e - r1, zc[lvl] + r1)
+    return (e - _np(wm.sym_starts)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Index structures
+# ---------------------------------------------------------------------------
+
+
+def validate_csa(csa, name: str = "csa") -> None:
+    counts = _np(csa.counts)
+    _req(counts.shape[0] == csa.sigma + 1, name, "C array length != sigma + 1")
+    _req(int(counts[0]) == 0, name, "C[0] != 0")
+    _req((np.diff(counts) >= 0).all(), name, "C array not monotone")
+    _req(int(counts[-1]) <= csa.n, name, "C[sigma] > n")
+    _req(int(counts[1]) == csa.d, name,
+         "C[1] != d (one terminator per document)")
+    validate_wavelet(csa.wm, f"{name}.wm")
+    _req(csa.wm.n == csa.n and csa.wm.sigma == csa.sigma, name,
+         "wavelet matrix n/sigma mismatch")
+    # cross-structure check: the BWT's symbol histogram decoded from the
+    # wavelet matrix must equal the C array deltas exactly
+    hist = wm_symbol_histogram(csa.wm)
+    _req(np.array_equal(hist, np.diff(counts).astype(np.int64)), name,
+         "BWT symbol histogram != C array deltas")
+    validate_sparse_bitvector(csa.sampled, f"{name}.sampled")
+    validate_sparse_bitvector(csa.doc_bv, f"{name}.doc_bv")
+    _req(csa.doc_bv.m == csa.d, name, "doc_bv ones != d")
+    samples = _np(csa.samples)
+    _req(samples.shape[0] == csa.sampled.m, name,
+         "samples length != sampled positions")
+    _req(samples.size == 0 or (0 <= samples.min() and samples.max() < csa.n),
+         name, "SA sample out of [0, n)")
+
+
+def validate_ilcp(ilcp, name: str = "ilcp") -> None:
+    rho = ilcp.nruns
+    bounds, vilcp, clens = _np(ilcp.run_starts), _np(ilcp.vilcp), _np(ilcp.clens)
+    _req(vilcp.shape[0] == rho, name, "vilcp length != nruns")
+    _req(bounds.shape[0] == rho + 1, name, "run bounds length != nruns + 1")
+    _req(int(bounds[0]) == 0 and int(bounds[-1]) == ilcp.n, name,
+         "runs do not tile [0, n)")
+    _req((np.diff(bounds) > 0).all(), name, "empty or reordered run")
+    _req(rho < 2 or bool((vilcp[1:] != vilcp[:-1]).all()), name,
+         "runs not maximal (adjacent runs share a head value)")
+    _req(vilcp.size == 0 or (0 <= vilcp.min() and vilcp.max() == ilcp.max_value),
+         name, "vilcp values out of [0, max_value]")
+    _req(clens.shape[0] == rho + 1, name, "clens length != nruns + 1")
+    _req(int(clens[0]) == 0 and int(clens[-1]) == ilcp.n, name,
+         "value-sorted run lengths do not sum to n")
+    _req((np.diff(clens) > 0).all(), name, "clens not strictly increasing")
+    vro = _np(ilcp.value_run_offset)
+    _req(vro.shape[0] == ilcp.max_value + 2, name,
+         "value_run_offset length != max_value + 2")
+    _req(int(vro[0]) == 0 and int(vro[-1]) == rho, name,
+         "value_run_offset does not cover all runs")
+    _req((np.diff(vro) >= 0).all(), name, "value_run_offset not monotone")
+    validate_sparse_bitvector(ilcp.L, f"{name}.L")
+    _req(ilcp.L.m == rho and ilcp.L.n == ilcp.n, name,
+         "L bitvector shape mismatch")
+    _req(np.array_equal(_np(ilcp.L.pos), bounds[:-1]), name,
+         "L ones != run starts")
+    validate_wavelet(ilcp.wm, f"{name}.wm")
+    _req(ilcp.wm.n == rho, name, "wavelet matrix not over the run heads")
+    _req(np.array_equal(_np(ilcp.rmq.values), vilcp), name,
+         "RMQ not built over the run-head values")
+
+
+def validate_pdl(pdl, name: str = "pdl") -> None:
+    L, I, d, nR = pdl.L, pdl.I, pdl.d, pdl.nrules
+    leaf = _np(pdl.leaf_starts)
+    _req(leaf.shape[0] == L + 1, name, "leaf_starts length != L + 1")
+    _req(int(leaf[0]) == 0 and int(leaf[-1]) == pdl.n, name,
+         "leaves do not tile the SA")
+    _req((np.diff(leaf) > 0).all(), name, "empty or reordered leaf")
+    soff, A = _np(pdl.set_off), _np(pdl.A)
+    _req(soff.shape[0] == L + I + 1, name, "set_off length != L + I + 1")
+    _req(int(soff[0]) == 0 and int(soff[-1]) == A.shape[0], name,
+         "set_off does not cover A")
+    _req((np.diff(soff) >= 0).all(), name, "set_off not monotone")
+    _req(A.size == 0 or (0 <= A.min() and A.max() <= d + nR), name,
+         "grammar symbol out of [0, d + nrules]")
+    for fld in ("rule_left", "rule_right"):
+        r = _np(getattr(pdl, fld))
+        _req(r.size == 0 or (0 <= r.min() and r.max() <= d + nR), name,
+             f"{fld} symbol out of range")
+    base = _np(pdl.doc_base)
+    _req(base.shape[0] == L + I + 1, name, "doc_base length != L + I + 1")
+    _req(int(base[0]) == 0 and (np.diff(base) >= 0).all(), name,
+         "doc_base not a prefix sum")
+    nl = _np(pdl.next_leaf)
+    _req(nl.size == 0 or (0 <= nl.min() and nl.max() <= L), name,
+         "next_leaf out of [0, L]")
+    par = _np(pdl.parent_of)
+    _req(par.size == 0 or (-1 <= par.min() and par.max() < L + I), name,
+         "parent_of out of range")
+    if pdl.has_freqs:
+        fv, gc = _np(pdl.freq_vals), _np(pdl.freq_gcum)
+        _req(fv.shape == gc.shape, name, "freq_vals/freq_gcum shape mismatch")
+        _req(fv.size == 0 or fv.min() >= 0, name, "negative frequency value")
+        _req(gc.size == 0 or (int(gc[0]) > 0 and (np.diff(gc) > 0).all()),
+             name, "freq_gcum not strictly increasing")
+
+
+def validate_sada(sada, name: str = "sada") -> None:
+    _req(sada.num_slots == max(0, sada.n - 1), name,
+         "num_slots != n - 1")
+    _validate_any_bitvector(sada.hp, f"{name}.hp")
+    validate_sparse_bitvector(sada.fs, f"{name}.fs")
+    validate_sparse_bitvector(sada.f1, f"{name}.f1")
+    # the unary H' code has one 1 per encoded slot; which slots are encoded
+    # depends on the variant
+    if sada.variant in ("plain", "rle", "sparse"):
+        _req(sada.hp.m == sada.num_slots, name,
+             "unary H' does not encode every slot")
+    else:  # filter_plain / sparse_sparse: H' restricted to filtered slots
+        _req(sada.hp.m == sada.fs.m, name,
+             "unary H' ones != filtered slot count")
+
+
+# ---------------------------------------------------------------------------
+# Whole-service validation + checksums
+# ---------------------------------------------------------------------------
+
+
+def checksum_pytree(tree) -> int:
+    """Order-sensitive CRC32 over every array leaf (bit-level identity)."""
+    crc = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        crc = zlib.crc32(np.ascontiguousarray(_np(leaf)).tobytes(), crc)
+    return crc
+
+
+def fingerprint_service(svc) -> dict:
+    """Per-structure checksums, for load-time bit-corruption detection."""
+    return {
+        comp: checksum_pytree(getattr(svc, comp))
+        for comp in ("csa", "ilcp", "pdl_list", "pdl_topk", "sada", "da")
+    }
+
+
+def verify_fingerprints(svc, expected: dict) -> None:
+    got = fingerprint_service(svc)
+    bad = sorted(k for k in expected if got.get(k) != expected[k])
+    if bad:
+        raise IndexIntegrityError(
+            f"index checksum mismatch in: {', '.join(bad)} "
+            "(bit-level corruption; structural invariants may still hold)"
+        )
+
+
+def validate_service(svc) -> dict:
+    """Run every structural validator over a RetrievalService's indexes.
+
+    Raises IndexIntegrityError on the first violated invariant; returns
+    the service fingerprints when everything holds."""
+    validate_csa(svc.csa)
+    validate_ilcp(svc.ilcp)
+    validate_pdl(svc.pdl_list, "pdl_list")
+    validate_pdl(svc.pdl_topk, "pdl_topk")
+    validate_sada(svc.sada)
+    da = _np(svc.da)
+    _req(da.size == 0 or (0 <= da.min() and da.max() < svc.coll.d), "da",
+         "document-array entry out of [0, d)")
+    return fingerprint_service(svc)

@@ -1,0 +1,195 @@
+"""Property-based index-integrity tests: any single corruption of an index
+pytree must be caught by the structural validators (or, for corruptions
+that happen to preserve every invariant, by the checksum fingerprints).
+
+Uses hypothesis (the real package, or the seeded shim in tests/_stubs) to
+draw corruption sites; every drawn mutation of a freshly built service
+must raise :class:`repro.errors.IndexIntegrityError`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common import replace
+from repro.data.collections import SyntheticSpec, generate
+from repro.errors import IndexIntegrityError
+from repro.serve.retrieval import RetrievalService
+from repro.serve.validate import (
+    checksum_pytree,
+    fingerprint_service,
+    validate_csa,
+    validate_ilcp,
+    validate_pdl,
+    validate_sada,
+    validate_service,
+    verify_fingerprints,
+    wm_symbol_histogram,
+)
+
+
+@pytest.fixture(scope="module")
+def svc():
+    coll = generate(SyntheticSpec("version", n_base=2, n_variants=6,
+                                  base_len=90, mutation_rate=0.01, seed=7))
+    return RetrievalService.build(coll, block_size=16, beta=8.0)
+
+
+def _mut(arr, idx, val):
+    out = np.array(arr, copy=True)
+    out[idx] = val
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Happy path
+# ---------------------------------------------------------------------------
+
+
+def test_fresh_build_validates_and_fingerprints(svc):
+    fps = validate_service(svc)
+    assert fps == fingerprint_service(svc) == svc.fingerprints
+    assert sorted(fps) == ["csa", "da", "ilcp", "pdl_list", "pdl_topk", "sada"]
+    verify_fingerprints(svc, fps)        # no exception on intact indexes
+
+
+def test_wm_histogram_matches_c_array(svc):
+    hist = wm_symbol_histogram(svc.csa.wm)
+    assert np.array_equal(hist, np.diff(np.asarray(svc.csa.counts)))
+    assert int(hist.sum()) == svc.csa.n
+
+
+# ---------------------------------------------------------------------------
+# Single-bit corruption of the wavelet matrix is always caught
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_any_wm_bit_flip_is_caught(svc, data):
+    wm = svc.csa.wm
+    words = np.array(wm.words, copy=True)
+    lvl = data.draw(st.integers(0, wm.levels - 1))
+    bit = data.draw(st.integers(0, words.shape[1] * 32 - 1))
+    words[lvl, bit // 32] ^= np.uint32(1) << np.uint32(bit % 32)
+    bad = replace(svc.csa, wm=replace(wm, words=words))
+    with pytest.raises(IndexIntegrityError):
+        validate_csa(bad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_wm_metadata_corruption_is_caught(svc, data):
+    wm = svc.csa.wm
+    field, idx_max = data.draw(st.sampled_from([
+        ("zcount", wm.levels - 1),
+        ("ones_prefix", None),
+        ("sym_starts", wm.sigma - 1),
+    ]))
+    delta = data.draw(st.sampled_from([-2, -1, 1, 3]))
+    if field == "ones_prefix":
+        prefix = np.array(wm.ones_prefix, copy=True)
+        lvl = data.draw(st.integers(0, wm.levels - 1))
+        word = data.draw(st.integers(1, prefix.shape[1] - 1))
+        prefix[lvl, word] += delta
+        bad = replace(wm, ones_prefix=prefix)
+    else:
+        idx = data.draw(st.integers(0, idx_max))
+        bad = replace(wm, **{field: _mut(getattr(wm, field), idx,
+                                         int(np.asarray(getattr(wm, field))[idx])
+                                         + delta)})
+    with pytest.raises(IndexIntegrityError):
+        validate_csa(replace(svc.csa, wm=bad))
+
+
+# ---------------------------------------------------------------------------
+# CSA / ILCP / PDL / Sada structural mutations
+# ---------------------------------------------------------------------------
+
+
+def test_csa_c_array_corruptions(svc):
+    counts = np.asarray(svc.csa.counts)
+    for bad_counts in (
+        _mut(counts, 0, 1),                        # C[0] != 0
+        _mut(counts, 1, svc.csa.d + 1),            # C[1] != d
+        _mut(counts, len(counts) - 1, svc.csa.n + 1),   # C[sigma] > n
+        counts[:-1],                               # wrong length
+    ):
+        with pytest.raises(IndexIntegrityError):
+            validate_csa(replace(svc.csa, counts=bad_counts))
+
+
+def test_csa_sample_out_of_range(svc):
+    samples = _mut(svc.csa.samples, 0, svc.csa.n)
+    with pytest.raises(IndexIntegrityError, match="SA sample"):
+        validate_csa(replace(svc.csa, samples=samples))
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_ilcp_mutations_are_caught(svc, data):
+    ilcp = svc.ilcp
+    assert ilcp.nruns >= 2, "fixture collection too degenerate"
+    which = data.draw(st.sampled_from(
+        ["bounds", "maximality", "clens", "vro"]
+    ))
+    if which == "bounds":
+        idx = data.draw(st.integers(1, ilcp.nruns - 1))
+        rs = np.asarray(ilcp.run_starts)
+        bad = replace(ilcp, run_starts=_mut(rs, idx, int(rs[idx - 1])))
+    elif which == "maximality":
+        idx = data.draw(st.integers(1, ilcp.nruns - 1))
+        v = np.asarray(ilcp.vilcp)
+        bad = replace(ilcp, vilcp=_mut(v, idx, int(v[idx - 1])))
+    elif which == "clens":
+        idx = data.draw(st.integers(1, ilcp.nruns - 1))
+        cl = np.asarray(ilcp.clens)
+        bad = replace(ilcp, clens=_mut(cl, idx, int(cl[idx - 1])))
+    else:
+        vro = np.asarray(ilcp.value_run_offset)
+        bad = replace(ilcp, value_run_offset=_mut(vro, len(vro) - 1,
+                                                  ilcp.nruns + 1))
+    with pytest.raises(IndexIntegrityError):
+        validate_ilcp(bad)
+
+
+def test_pdl_mutations_are_caught(svc):
+    pdl = svc.pdl_list
+    soff = np.asarray(pdl.set_off)
+    with pytest.raises(IndexIntegrityError, match="set_off"):
+        validate_pdl(replace(pdl, set_off=_mut(soff, len(soff) - 1,
+                                               int(soff[-1]) + 7)))
+    leaf = np.asarray(pdl.leaf_starts)
+    with pytest.raises(IndexIntegrityError):
+        validate_pdl(replace(pdl, leaf_starts=_mut(leaf, 0, 1)))
+    A = np.asarray(pdl.A)
+    if A.size:
+        with pytest.raises(IndexIntegrityError, match="grammar symbol"):
+            validate_pdl(replace(pdl, A=_mut(A, 0, pdl.d + pdl.nrules + 5)))
+
+
+def test_sada_slot_count_mismatch(svc):
+    with pytest.raises(IndexIntegrityError, match="num_slots"):
+        validate_sada(replace(svc.sada, num_slots=svc.sada.num_slots + 1))
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints catch bit-level corruption that keeps the invariants
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_catches_invariant_preserving_corruption(svc):
+    # swapping two equal-length runs' *sample values* keeps every structural
+    # invariant candidate simple: just flip one DA entry to another valid id
+    da = np.asarray(svc.da)
+    bad_da = _mut(da, 0, (int(da[0]) + 1) % svc.coll.d)
+    bad = replace(svc, da=bad_da)
+    validate_service(bad)                 # structurally still fine
+    assert checksum_pytree(bad_da) != checksum_pytree(da)
+    with pytest.raises(IndexIntegrityError, match="checksum mismatch"):
+        verify_fingerprints(bad, svc.fingerprints)
+
+
+def test_build_time_validation_is_wired_in(svc):
+    # build(validate=True) already ran: fingerprints stored on the service
+    assert svc.fingerprints and verify_fingerprints(svc, svc.fingerprints) is None
