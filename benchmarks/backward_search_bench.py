@@ -71,23 +71,23 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
 
         search_variants = {
             "legacy-dual-descent": jax.jit(
-                lambda p, l: csa_search_batch(csa, p, l)
+                lambda p, l, csa=csa: csa_search_batch(csa, p, l)
             ),
             "xla-pair-descent": jax.jit(
-                lambda p, l: csa_search_planned(csa, p, l, use_kernel=False)
+                lambda p, l, csa=csa: csa_search_planned(csa, p, l, use_kernel=False)
             ),
             "pallas-kernel": jax.jit(
-                lambda p, l: csa_search_planned(csa, p, l, use_kernel=True)
+                lambda p, l, csa=csa: csa_search_planned(csa, p, l, use_kernel=True)
             ),
         }
         plan_variants = {
             "plan-fallback": jax.jit(
-                lambda p, l: plan_queries(csa, sada, p, l, 4.0, -1,
-                                          use_kernel=False)
+                lambda p, l, csa=csa, sada=sada: plan_queries(
+                    csa, sada, p, l, 4.0, -1, use_kernel=False)
             ),
             "plan-kernel": jax.jit(
-                lambda p, l: plan_queries(csa, sada, p, l, 4.0, -1,
-                                          use_kernel=True)
+                lambda p, l, csa=csa, sada=sada: plan_queries(
+                    csa, sada, p, l, 4.0, -1, use_kernel=True)
             ),
         }
 

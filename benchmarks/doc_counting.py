@@ -30,7 +30,7 @@ def run(collections=("dna-p001", "version-p001", "version-p01", "random")):
         expected = None
         for variant in VARIANTS:
             s = build_sada(data, variant)
-            fn = jax.jit(lambda a, b: sada_count_batch(s, a, b))
+            fn = jax.jit(lambda a, b, s=s: sada_count_batch(s, a, b))
             t, out = time_batched(fn, lo, hi)
             if expected is None:
                 expected = np.asarray(out)
@@ -42,7 +42,7 @@ def run(collections=("dna-p001", "version-p001", "version-p01", "random")):
                  round(t * 1e6 / len(ranges), 2)]
             )
         ilcp = build_ilcp(data)
-        fn = jax.jit(lambda a, b, m: ilcp_count_docs_batch(ilcp, a, b, m))
+        fn = jax.jit(lambda a, b, m, ilcp=ilcp: ilcp_count_docs_batch(ilcp, a, b, m))
         t, out = time_batched(fn, lo, hi, lens)
         np.testing.assert_array_equal(np.asarray(out), expected)
         rows.append(

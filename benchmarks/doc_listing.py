@@ -50,31 +50,31 @@ def run(collections=("dna-p001", "dna-p03", "version-p001", "random")):
         da_bits = n * max(1, ceil_log2(coll.d))
         engines = {
             "Brute-L": (
-                jax.jit(jax.vmap(lambda a, b: brute_list_csa(csa, a, b, max_occ, max_df)[:2])),
+                jax.jit(jax.vmap(lambda a, b, csa=csa, mo=max_occ, md=max_df: brute_list_csa(csa, a, b, mo, md)[:2])),
                 0,
             ),
             "Brute-D": (
-                jax.jit(jax.vmap(lambda a, b: brute_list_da(da, a, b, max_occ, max_df)[:2])),
+                jax.jit(jax.vmap(lambda a, b, da=da, mo=max_occ, md=max_df: brute_list_da(da, a, b, mo, md)[:2])),
                 da_bits,
             ),
             "Sada-C-D": (
-                jax.jit(jax.vmap(lambda a, b: sada_c_list_docs_da(rmq_c, da, a, b, coll.d, max_df))),
+                jax.jit(jax.vmap(lambda a, b, rmq_c=rmq_c, da=da, d=coll.d, md=max_df: sada_c_list_docs_da(rmq_c, da, a, b, d, md))),
                 da_bits + 2 * n,
             ),
             "Sada-I-D": (
-                jax.jit(jax.vmap(lambda a, b: ilcp_list_docs_da(ilcp, da, a, b, max_df))),
+                jax.jit(jax.vmap(lambda a, b, ilcp=ilcp, da=da, md=max_df: ilcp_list_docs_da(ilcp, da, a, b, md))),
                 da_bits + ilcp.modeled_bits_listing(),
             ),
             "Sada-I-L": (
-                jax.jit(jax.vmap(lambda a, b: ilcp_list_docs_csa(ilcp, csa, a, b, max_df))),
+                jax.jit(jax.vmap(lambda a, b, ilcp=ilcp, csa=csa, md=max_df: ilcp_list_docs_csa(ilcp, csa, a, b, md))),
                 ilcp.modeled_bits_listing(),
             ),
             "PDL": (
-                jax.jit(jax.vmap(lambda a, b: pdl_list_docs(pdl, csa, a, b, max_df, max_buf=2048))),
+                jax.jit(jax.vmap(lambda a, b, pdl=pdl, csa=csa, md=max_df: pdl_list_docs(pdl, csa, a, b, md, max_buf=2048))),
                 pdl.modeled_bits(),
             ),
             "WT": (
-                jax.jit(jax.vmap(lambda a, b: wt_list_docs(da_wm, a, b, max_df)[::2])),
+                jax.jit(jax.vmap(lambda a, b, da_wm=da_wm, md=max_df: wt_list_docs(da_wm, a, b, md)[::2])),
                 wt_modeled_bits(da_wm),
             ),
         }

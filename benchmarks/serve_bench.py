@@ -157,17 +157,19 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
             batches = [[workload[i] for i in row] for row in idx]
             it = iter(range(10_000))
 
-            def batch():
+            def batch(batches=batches, it=it):
                 return batches[next(it) % len(batches)]
 
             def pairs(b):
                 return [b[i : i + 2] for i in range(0, len(b), 2)] or [b[:1]]
 
             endpoints = {
-                "plan": lambda: svc.plan(batch()),
-                "list": lambda: svc.list_docs(batch(), max_df=max_df, max_buf=max_buf),
-                "topk": lambda: svc.topk(batch(), k=k, max_buf=max_buf),
-                "tfidf": lambda: svc.tfidf(pairs(batch()), k=k, max_buf=max_buf),
+                "plan": lambda svc=svc, batch=batch: svc.plan(batch()),
+                "list": lambda svc=svc, batch=batch: svc.list_docs(
+                    batch(), max_df=max_df, max_buf=max_buf),
+                "topk": lambda svc=svc, batch=batch: svc.topk(batch(), k=k, max_buf=max_buf),
+                "tfidf": lambda svc=svc, batch=batch, pairs=pairs: svc.tfidf(
+                    pairs(batch()), k=k, max_buf=max_buf),
             }
             for ep, fn in endpoints.items():
                 p50, p99, mean = _timed(fn, iters=iters, warmup=iters + 1)

@@ -33,11 +33,11 @@ def run(collections=("dna-p001", "version-p001", "random"), ks=(10, 100)):
         for k in ks:
             kk = min(k, coll.d)
 
-            def brute_l(a, b):
+            def brute_l(a, b, csa=csa, max_occ=max_occ, kk=kk):
                 d_, c_, f_ = brute_list_csa(csa, a, b, max_occ)
                 return brute_topk(d_, c_, f_, kk)
 
-            def brute_d(a, b):
+            def brute_d(a, b, da=da, max_occ=max_occ, kk=kk):
                 d_, c_, f_ = brute_list_da(da, a, b, max_occ)
                 return brute_topk(d_, c_, f_, kk)
 
@@ -45,11 +45,11 @@ def run(collections=("dna-p001", "version-p001", "random"), ks=(10, 100)):
                 "Brute-L": (jax.jit(jax.vmap(brute_l)), 0),
                 "Brute-D": (jax.jit(jax.vmap(brute_d)), n * 16),
                 "PDL-64+F": (
-                    jax.jit(jax.vmap(lambda a, b: pdl_topk(pdl_f, csa, a, b, kk, max_buf=2048))),
+                    jax.jit(jax.vmap(lambda a, b, pdl_f=pdl_f, csa=csa, kk=kk: pdl_topk(pdl_f, csa, a, b, kk, max_buf=2048))),
                     pdl_f.modeled_bits(),
                 ),
                 "PDL-64-4": (
-                    jax.jit(jax.vmap(lambda a, b: pdl_topk(pdl_b, csa, a, b, kk, max_buf=2048))),
+                    jax.jit(jax.vmap(lambda a, b, pdl_b=pdl_b, csa=csa, kk=kk: pdl_topk(pdl_b, csa, a, b, kk, max_buf=2048))),
                     pdl_b.modeled_bits(),
                 ),
             }

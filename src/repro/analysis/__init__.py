@@ -1,0 +1,34 @@
+"""Static analysis for the serving stack: jaxpr contract audits + AST lint.
+
+Two layers, one CI gate (``python -m repro.analysis``):
+
+* :mod:`repro.analysis.jaxpr` / :mod:`repro.analysis.contracts` — trace
+  every compiled serving endpoint and check launch counts, gather
+  ceilings, host-callback and 64-bit-widening bans, and the static VMEM
+  budget, all at lowering time;
+* :mod:`repro.analysis.lint` — repo-specific AST rules (injectable clocks,
+  no host sync in batched executors, registered fault sites only, no
+  import-time jit execution).
+"""
+
+from repro.analysis.jaxpr import (
+    count_primitive,
+    find_host_callbacks,
+    find_primitives,
+    gather_count,
+    iter_eqns,
+    pallas_block_bytes,
+    pallas_eqns,
+    wide_dtype_eqns,
+)
+
+__all__ = [
+    "count_primitive",
+    "find_host_callbacks",
+    "find_primitives",
+    "gather_count",
+    "iter_eqns",
+    "pallas_block_bytes",
+    "pallas_eqns",
+    "wide_dtype_eqns",
+]

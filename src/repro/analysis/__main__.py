@@ -1,0 +1,5 @@
+import sys
+
+from repro.analysis.report import run
+
+sys.exit(run())

@@ -1,0 +1,221 @@
+"""Declarative endpoint contracts + the jaxpr auditor that enforces them.
+
+Every compiled serving endpoint (kind x pow2 batch bucket x backend) from
+``repro.serve.retrieval`` carries implicit invariants that, until this
+module, were enforced by two hand-rolled assertions in tests and nothing
+else:
+
+* **launch count** — the fused backward-search path lowers to exactly ONE
+  ``pallas_call`` per batch; the XLA pair-descent fallback lowers to ZERO.
+  A second launch (or a lost one) is a silent 2x regression that no
+  correctness test notices.
+* **gather ceiling** — the pair-descent range search issues a bounded
+  number of static gather eqns (2 per wavelet level inside the symbol
+  scan, plus table lookups); an executor rewrite that reintroduces the
+  legacy dual descent doubles it.
+* **no host callbacks** — ``pure_callback`` / ``io_callback`` /
+  ``debug_callback`` in a serving jaxpr is a host round-trip per batch.
+* **no 64-bit widening** — the serving ABI is int32 indexes / float32
+  scores; any f64/i64 aval means an x64 leak or an unpinned host scalar
+  was folded into the program.
+* **VMEM budget** — each ``pallas_call``'s block shapes must fit
+  ``BACKWARD_SEARCH_VMEM_BUDGET``, and an over-budget index must provably
+  fall back to XLA *at lowering time* (``backend="kernel_overbudget"``
+  contracts trace with the budget clamped to 1 byte and demand zero
+  launches).
+
+``build_registry`` derives the expected numbers from the service's own
+index dimensions, ``audit_service`` traces every endpoint program through
+``RetrievalService.endpoint_program`` and checks the jaxprs — nothing
+executes on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import jaxpr as jx
+from repro.kernels import ops
+
+#: static gather slack on top of the 2-per-level pair-descent rank gathers:
+#: pattern reversal, base/sym_starts lookups, and the Sada df counting that
+#: shares the plan program (measured 4-6 on the current tree; 8 is margin
+#: without room for a second descent, which would add 2 * levels)
+GATHER_SLACK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class EndpointContract:
+    """One audited (kind x bucket x backend) endpoint signature."""
+
+    kind: str                 # "plan" | "list" | "topk" | "tfidf"
+    bucket: tuple             # (batch_bucket, len_bucket)
+    backend: str              # "kernel" | "xla" | "kernel_overbudget"
+    pallas_calls: int         # exact whole-program launch count
+    max_gathers: int | None = None    # static gather-eqn ceiling
+    vmem_budget: int | None = None    # bytes per pallas_call block set
+
+    @property
+    def key(self) -> str:
+        return f"{self.kind}/B{self.bucket[0]}xm{self.bucket[1]}/{self.backend}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    contract: str             # EndpointContract.key (or a lint location)
+    check: str                # "pallas_calls" | "gathers" | "host_callback"
+    message: str              #   | "wide_dtype" | "vmem"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def pair_descent_gather_ceiling(levels: int) -> int:
+    """Static gather ceiling for a planned range search: the fused (lo,
+    hi) pair descent costs 2 rank gathers per wavelet level inside the
+    symbol scan (loop bodies count once in a jaxpr) plus bounded table
+    lookups.  The legacy dual descent costs 4 per level and must not fit."""
+    return 2 * levels + GATHER_SLACK
+
+
+def build_registry(svc, buckets=((1, 8), (8, 8))) -> list[EndpointContract]:
+    """Contracts for every endpoint the compile cache can lower, with the
+    expected numbers derived from the service's index dimensions."""
+    levels = int(svc.csa.wm.words.shape[0])
+    ceiling = pair_descent_gather_ceiling(levels)
+    budget = ops.BACKWARD_SEARCH_VMEM_BUDGET
+    contracts = []
+    for bucket in buckets:
+        for kind in ("plan", "list", "topk"):
+            gath = ceiling if kind == "plan" else None
+            contracts.append(EndpointContract(
+                kind, bucket, "kernel", pallas_calls=1, max_gathers=gath,
+                vmem_budget=budget,
+            ))
+            contracts.append(EndpointContract(
+                kind, bucket, "xla", pallas_calls=0, max_gathers=gath,
+            ))
+            contracts.append(EndpointContract(
+                kind, bucket, "kernel_overbudget", pallas_calls=0,
+            ))
+        # tfidf's term range search is batch-reshaped through the same CSA
+        # machinery but has no kernel path of its own yet
+        contracts.append(EndpointContract(
+            "tfidf", bucket, "xla", pallas_calls=0,
+        ))
+    return contracts
+
+
+def audit_jaxpr(traced, contract: EndpointContract) -> list[Violation]:
+    """Check one traced endpoint against one contract.  Pure jaxpr
+    inspection — nothing is compiled or executed."""
+    out = []
+    key = contract.key
+
+    n_pallas = jx.count_primitive(traced, "pallas_call")
+    if n_pallas != contract.pallas_calls:
+        out.append(Violation(key, "pallas_calls", (
+            f"expected exactly {contract.pallas_calls} pallas_call eqn(s), "
+            f"found {n_pallas} — the launch-count contract of the fused "
+            f"backward-search path (PR 2) is broken"
+        )))
+
+    if contract.max_gathers is not None:
+        n_gather = jx.gather_count(traced)
+        if n_gather > contract.max_gathers:
+            out.append(Violation(key, "gathers", (
+                f"{n_gather} static gather eqns exceed the pair-descent "
+                f"ceiling {contract.max_gathers} — a second wavelet descent "
+                f"(or per-boundary rank calls) crept back into the range "
+                f"search"
+            )))
+
+    for eqn in jx.find_host_callbacks(traced):
+        out.append(Violation(key, "host_callback", (
+            f"host callback primitive {eqn.primitive.name!r} in a serving "
+            f"jaxpr — every batch would pay a host round-trip; move the "
+            f"logic on-device or behind the reference path"
+        )))
+
+    for eqn, dtype in jx.wide_dtype_eqns(traced):
+        out.append(Violation(key, "wide_dtype", (
+            f"eqn {eqn.primitive.name!r} produces {dtype} — the serving ABI "
+            f"is int32/float32; pin the dtype at the source instead of "
+            f"letting x64 or a host scalar widen the program"
+        )))
+
+    if contract.vmem_budget is not None:
+        for eqn in jx.pallas_eqns(traced):
+            est = jx.pallas_block_bytes(eqn)
+            if est > contract.vmem_budget:
+                out.append(Violation(key, "vmem", (
+                    f"pallas_call block set is ~{est} bytes, over the "
+                    f"{contract.vmem_budget}-byte VMEM budget — the wrapper "
+                    f"should have taken the XLA fallback for this index"
+                )))
+    return out
+
+
+def trace_for_contract(svc, contract: EndpointContract):
+    """Trace the endpoint program a contract describes, with the backend
+    forced and — for ``kernel_overbudget`` — the VMEM budget clamped so an
+    over-budget index is simulated at lowering time."""
+    B, m = contract.bucket
+    use_kernel = contract.backend != "xla"
+    if contract.backend == "kernel_overbudget":
+        saved = ops.BACKWARD_SEARCH_VMEM_BUDGET
+        ops.BACKWARD_SEARCH_VMEM_BUDGET = 1
+        try:
+            return svc.trace_endpoint(contract.kind, B, m, use_kernel=True)
+        finally:
+            ops.BACKWARD_SEARCH_VMEM_BUDGET = saved
+    return svc.trace_endpoint(contract.kind, B, m, use_kernel=use_kernel)
+
+
+def audit_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]:
+    """Audit every (kind x bucket x backend) contract of a service.
+
+    Returns (report, violations): the report lists each audited contract
+    with its measured numbers (launches, gathers, VMEM estimate) so the CI
+    artifact doubles as a lowering-cost trend record."""
+    registry = build_registry(svc, buckets)
+    audited, violations = [], []
+    # static (metadata-level) VMEM estimate, independent of tracing: the
+    # same block layout the kernel wrapper will claim for this index
+    wm = svc.csa.wm
+    base = svc.csa.counts[: svc.csa.sigma] - wm.sym_starts
+    meta_bytes = ops.block_meta_bytes(ops.backward_search_block_meta(
+        wm.words, wm.ones_prefix, wm.zcount, base,
+        batch=max(b for b, _ in buckets), max_m=max(m for _, m in buckets),
+    ))
+    if meta_bytes > ops.BACKWARD_SEARCH_VMEM_BUDGET:
+        violations.append(Violation(
+            "index/static", "vmem",
+            f"index block metadata claims ~{meta_bytes} bytes of VMEM, over "
+            f"the {ops.BACKWARD_SEARCH_VMEM_BUDGET}-byte budget — kernel "
+            f"launches on this index would be routed to XLA",
+        ))
+    for contract in registry:
+        traced = trace_for_contract(svc, contract)
+        vs = audit_jaxpr(traced, contract)
+        violations.extend(vs)
+        audited.append({
+            "contract": contract.key,
+            "expected_pallas_calls": contract.pallas_calls,
+            "pallas_calls": jx.count_primitive(traced, "pallas_call"),
+            "gathers": jx.gather_count(traced),
+            "gather_ceiling": contract.max_gathers,
+            "vmem_block_bytes": max(
+                (jx.pallas_block_bytes(e) for e in jx.pallas_eqns(traced)),
+                default=0,
+            ),
+            "ok": not vs,
+        })
+    report = {
+        "contracts_audited": len(registry),
+        "vmem_budget_bytes": ops.BACKWARD_SEARCH_VMEM_BUDGET,
+        "index_static_vmem_bytes": meta_bytes,
+        "endpoints": audited,
+        "violations": [v.as_dict() for v in violations],
+    }
+    return report, violations

@@ -1,0 +1,342 @@
+"""Repo-specific AST lint — the invariants ruff can't express.
+
+Four rules, each born from a contract an earlier PR established by
+convention and that only grep enforced until now:
+
+* **RT001** — no direct ``time.time()`` / ``time.sleep()`` /
+  ``time.monotonic()`` / ``time.perf_counter()`` calls under
+  ``repro/serve/``.  The runtime's determinism story (deadline tests,
+  breaker cooldowns, fault schedules) rests on every clock read going
+  through the injectable ``clock=`` / ``sleep=`` parameters; one direct
+  call makes a codepath untestable.  *References* (``clock=time.monotonic``
+  as a default) are exactly the injection pattern and stay legal.
+* **TR001** — no host sync or Python branching on traced values inside
+  ``*_batch`` executors and ``repro/kernels/``: ``.item()``, ``float(x)`` /
+  ``int(x)`` / ``bool(x)`` on a positional parameter, or ``if`` / ``while``
+  / ternary tests reading one.  Positional-no-default parameters of these
+  functions are traced arrays by the serving ABI; branching on one either
+  crashes under jit or silently forces a device sync per batch.  Static
+  knobs ride keyword-only / defaulted parameters, which the rule ignores
+  (``.shape`` / ``.ndim`` / ``.size`` / ``.dtype`` reads are static too).
+* **FJ001** — fault sites are introduced only through the
+  ``repro.serve.faults`` hooks (``faults.fire`` / ``faults.poison``), only
+  in the instrumented serving module, and never inside a ``*reference*``
+  function: the reference path is the degradation ladder's last resort and
+  must stay fault-free.  Raising ``FaultInjectedError`` directly anywhere
+  outside ``repro.serve.faults`` counts as an unregistered fault site.
+* **JX001** — no jit execution at module import time: calling a
+  ``jax.jit``-wrapped callable (or ``jax.jit(f)(...)`` immediately) at
+  module scope traces and compiles during import, which breaks
+  ``JAX_PLATFORMS``-less tooling, slows every CLI, and hides compile cost
+  from the serving metrics.  *Wrapping* at module scope (decorators,
+  ``g = jax.jit(f)``) is the normal idiom and stays legal.
+
+Violations may be suppressed by ``allowlist.json`` next to this module —
+a comment-free JSON map of rule id to ``path`` or ``path:qualname``
+entries; keep it narrow.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+
+_ALLOWLIST_FILE = pathlib.Path(__file__).with_name("allowlist.json")
+
+_TIME_CALLS = {"time", "sleep", "monotonic", "perf_counter"}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+_CAST_BUILTINS = {"float", "int", "bool"}
+_FAULT_HOOKS = {"fire", "poison"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str                # repo-relative posix path
+    line: int
+    qualname: str            # enclosing function ("<module>" at top level)
+    message: str
+    fixit: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+
+FIXITS = {
+    "RT001": (
+        "take the clock as an injectable parameter (clock=time.monotonic / "
+        "sleep=time.sleep defaults, as ServeRuntime does) and call that"
+    ),
+    "TR001": (
+        "keep the branch on-device: jnp.where / lax.cond / lax.select on "
+        "the traced value, or move the static knob to a keyword-only "
+        "parameter so the tracer never sees it"
+    ),
+    "FJ001": (
+        "instrument the site with faults.fire()/faults.poison() from "
+        "repro.serve.faults inside the batched serving path only — the "
+        "reference path must stay the fault-free degradation target"
+    ),
+    "JX001": (
+        "wrap at module scope but call lazily: move the call into a "
+        "function, or route compilation through the serving layer's AOT "
+        "compile cache so the cost is metered"
+    ),
+}
+
+
+def _load_allowlist(path: pathlib.Path = _ALLOWLIST_FILE) -> dict:
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text())
+
+
+def _is_jit_wrap(node: ast.AST) -> bool:
+    """True for ``jax.jit(...)`` / ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "jit" and \
+            isinstance(f.value, ast.Name) and f.value.id == "jax":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "partial" or \
+            isinstance(f, ast.Name) and f.id == "partial":
+        return any(_is_jit_name(a) for a in node.args)
+    return False
+
+
+def _is_jit_name(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == "jit" and \
+        isinstance(node.value, ast.Name) and node.value.id == "jax"
+
+
+class _FileLinter(ast.NodeVisitor):
+    """One pass over one file; rules share the qualname/scope bookkeeping."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.out: list[LintViolation] = []
+        self._scope: list[str] = []
+        self._func_depth = 0
+        self._jitted_names: set[str] = set()
+        self.in_serve = "serve/" in path
+        self.in_kernels = "kernels/" in path
+        self.is_faults_mod = path.endswith("serve/faults.py")
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self._scope) if self._scope else "<module>"
+
+    def flag(self, rule: str, node: ast.AST, message: str) -> None:
+        self.out.append(LintViolation(
+            rule=rule, path=self.path, line=node.lineno,
+            qualname=self.qualname, message=message, fixit=FIXITS[rule],
+        ))
+
+    # -- module-level jit execution (JX001) ----------------------------------
+
+    def _scan_module_jit(self) -> None:
+        for node in self.tree.body:
+            self._collect_jit_bindings(node)
+        for stmt in self.tree.body:
+            self._check_module_calls(stmt)
+
+    def _collect_jit_bindings(self, node: ast.stmt) -> None:
+        if isinstance(node, ast.Assign) and _is_jit_wrap(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self._jitted_names.add(tgt.id)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_wrap(d) or _is_jit_name(d)
+                   for d in node.decorator_list):
+                self._jitted_names.add(node.name)
+
+    def _check_module_calls(self, stmt: ast.stmt) -> None:
+        # descend into module-level control flow, but not into defs/classes
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in self._jitted_names:
+                self.flag("JX001", node, (
+                    f"jit-compiled {f.id!r} executed at module import time"
+                ))
+            elif isinstance(f, ast.Call) and _is_jit_wrap(f):
+                self.flag("JX001", node, (
+                    "jax.jit(...)(...) executed at module import time"
+                ))
+
+    # -- scoped rules --------------------------------------------------------
+
+    def visit_FunctionDef(self, node):
+        self._visit_func(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._visit_func(node)
+
+    def visit_ClassDef(self, node):
+        self._scope.append(node.name)
+        self.generic_visit(node)
+        self._scope.pop()
+
+    def _visit_func(self, node) -> None:
+        self._scope.append(node.name)
+        self._func_depth += 1
+        if self.in_kernels or node.name.endswith("_batch"):
+            self._check_traced_scope(node)
+        if "reference" in node.name:
+            self._check_reference_path(node)
+        self.generic_visit(node)
+        self._func_depth -= 1
+        self._scope.pop()
+
+    def visit_Call(self, node):
+        # RT001: direct wall-clock calls in the serving layer
+        f = node.func
+        if self.in_serve and isinstance(f, ast.Attribute) and \
+                f.attr in _TIME_CALLS and isinstance(f.value, ast.Name) and \
+                f.value.id == "time":
+            self.flag("RT001", node, (
+                f"direct time.{f.attr}() call in repro/serve/ — the runtime "
+                f"clock must be injectable"
+            ))
+        # FJ001: fault hooks outside the instrumented serving module
+        if self._is_fault_hook(node) and not self.is_faults_mod and \
+                not self.path.endswith("serve/retrieval.py"):
+            self.flag("FJ001", node, (
+                "fault site introduced outside the instrumented serving "
+                "module (repro/serve/retrieval.py)"
+            ))
+        if isinstance(f, ast.Name) and f.id == "FaultInjectedError" and \
+                not self.is_faults_mod:
+            self.flag("FJ001", node, (
+                "FaultInjectedError raised directly — unregistered fault "
+                "site bypassing the seeded schedules"
+            ))
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_fault_hook(node: ast.Call) -> bool:
+        f = node.func
+        return isinstance(f, ast.Attribute) and f.attr in _FAULT_HOOKS and \
+            isinstance(f.value, ast.Name) and f.value.id == "faults"
+
+    # -- TR001 helpers -------------------------------------------------------
+
+    @staticmethod
+    def _traced_params(node) -> set:
+        """Positional-no-default parameter names: traced arrays by the
+        serving ABI (static knobs are keyword-only or defaulted)."""
+        args = node.args
+        pos = list(args.posonlyargs) + list(args.args)
+        n_default = len(args.defaults)
+        traced = pos[: len(pos) - n_default] if n_default else pos
+        return {a.arg for a in traced if a.arg not in ("self", "cls")}
+
+    def _static_names(self, expr: ast.AST) -> set:
+        """Names only reached through static attributes (x.shape, x.ndim)
+        inside ``expr`` — reading those is not a host sync."""
+        static = set()
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS \
+                    and isinstance(sub.value, ast.Name):
+                static.add(sub.value.id)
+        return static
+
+    def _check_traced_scope(self, node) -> None:
+        traced = self._traced_params(node)
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                    sub is not node:
+                # nested helpers' parameters shadow the outer traced names
+                traced = traced - self._traced_params(sub)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                f = sub.func
+                if isinstance(f, ast.Attribute) and f.attr == "item":
+                    self.flag("TR001", sub, (
+                        ".item() host sync inside a batched/kernel scope"
+                    ))
+                elif isinstance(f, ast.Name) and f.id in _CAST_BUILTINS and \
+                        sub.args and isinstance(sub.args[0], ast.Name) and \
+                        sub.args[0].id in traced:
+                    self.flag("TR001", sub, (
+                        f"{f.id}({sub.args[0].id}) forces a host sync on a "
+                        f"traced parameter"
+                    ))
+            tests = []
+            if isinstance(sub, (ast.If, ast.While)):
+                tests.append(sub.test)
+            elif isinstance(sub, ast.IfExp):
+                tests.append(sub.test)
+            for test in tests:
+                static_ok = self._static_names(test)
+                for name in ast.walk(test):
+                    if isinstance(name, ast.Name) and name.id in traced and \
+                            name.id not in static_ok and \
+                            isinstance(name.ctx, ast.Load):
+                        self.flag("TR001", test, (
+                            f"Python branch on traced parameter "
+                            f"{name.id!r} inside a batched/kernel scope"
+                        ))
+                        break
+
+    # -- FJ001: reference path must stay uninstrumented ----------------------
+
+    def _check_reference_path(self, node) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and self._is_fault_hook(sub):
+                self.flag("FJ001", sub, (
+                    f"fault site inside reference-path function "
+                    f"{node.name!r} — the degradation target must stay "
+                    f"fault-free"
+                ))
+
+
+def lint_file(path: pathlib.Path, rel: str) -> list[LintViolation]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    linter = _FileLinter(rel, tree)
+    linter._scan_module_jit()
+    linter.visit(tree)
+    return linter.out
+
+
+def _allowed(v: LintViolation, allowlist: dict) -> bool:
+    entries = allowlist.get(v.rule, [])
+    return v.path in entries or f"{v.path}:{v.qualname}" in entries
+
+
+def lint_tree(root, allowlist: dict | None = None) -> tuple[list, dict]:
+    """Lint every .py file under ``root``.  Returns (violations, stats)."""
+    root = pathlib.Path(root)
+    allowlist = _load_allowlist() if allowlist is None else allowlist
+    violations, files = [], 0
+    for path in sorted(root.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        files += 1
+        rel = path.relative_to(root).as_posix()
+        for v in lint_file(path, rel):
+            if not _allowed(v, allowlist):
+                violations.append(v)
+    stats = {
+        "files_scanned": files,
+        "rules": sorted(FIXITS),
+        "allowlisted": {r: len(v) for r, v in (allowlist or {}).items()},
+    }
+    return violations, stats

@@ -266,7 +266,7 @@ def build_pdl(
     is_first_child = np.zeros(L + I, dtype=bool)
     parent_of = np.full(L + I, -1, dtype=np.int32)
     next_leaf = np.zeros(max(I, 1), dtype=np.int32)
-    for j, old in enumerate(internal_old):
+    for j, _old in enumerate(internal_old):
         # creation order of internal nodes matches st.internal_children order
         children = st.internal_children[j]
         nl = st.internal_next_leaf[j]

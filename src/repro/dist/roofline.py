@@ -74,7 +74,9 @@ def parse_collectives(hlo_text: str, scan_trips: int = 1) -> CollectiveStats:
             continue
         dtype, dims, kind = m.groups()
         mult = 1 if in_entry else max(1, int(scan_trips))
-        by_kind[kind] = by_kind.get(kind, 0.0) + _shape_bytes(dtype, dims) * mult
+        # accumulate in Python floats: _shape_bytes is already float, and a
+        # numpy 64-bit scalar sneaking in here would widen every report row
+        by_kind[kind] = float(by_kind.get(kind, 0.0) + _shape_bytes(dtype, dims) * mult)
         count += mult
     return CollectiveStats(
         by_kind=by_kind, total_bytes=float(sum(by_kind.values())), count=count
@@ -119,8 +121,10 @@ def roofline_terms(
     """
     chips = max(1, int(chips))
     model_flops = float(meta.get("model_flops", 0.0))
-    flops = max(float(meta.get("analytic_flops", 0.0)), raw_flops)
-    bytes_ = max(float(meta.get("analytic_bytes", 0.0)), raw_bytes)
+    # raw_* may arrive as numpy scalars from XLA cost_analysis dicts; pin
+    # to Python floats before they mix into the reported terms
+    flops = max(float(meta.get("analytic_flops", 0.0)), float(raw_flops))
+    bytes_ = max(float(meta.get("analytic_bytes", 0.0)), float(raw_bytes))
 
     compute_s = flops / (chips * PEAK_FLOPS)
     memory_s = bytes_ / (chips * PEAK_HBM_BPS)

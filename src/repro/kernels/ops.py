@@ -9,6 +9,9 @@ XLA path.
 
 from __future__ import annotations
 
+import math
+
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -23,6 +26,49 @@ from repro.kernels.rmq import rmq_pallas
 #: matrix; larger indexes take the XLA pair-descent path instead (sharding
 #: the index over cores is the ROADMAP's per-shard serving follow-up).
 BACKWARD_SEARCH_VMEM_BUDGET = 12 * 2**20
+
+
+def backward_search_resident_bytes(words, ones_prefix, zcount, base) -> int:
+    """VMEM the fused kernel keeps resident across the whole search: the
+    flattened wavelet levels plus the zcount/base tables (every element is
+    4 bytes wide — uint32 words, int32 tables).
+
+    Single source of truth for the budget decision: the wrapper below
+    compares this against ``BACKWARD_SEARCH_VMEM_BUDGET`` before launching,
+    and ``repro.analysis`` re-derives the same number at audit time to
+    prove the fallback engages at lowering time."""
+    return int(words.size + ones_prefix.size + zcount.size + base.size) * 4
+
+
+def backward_search_block_meta(words, ones_prefix, zcount, base,
+                               batch: int, max_m: int, *,
+                               block_q: int = 256) -> list:
+    """Per-grid-step block layout of the fused kernel as (shape, dtype)
+    pairs, mirroring the BlockSpecs in ``backward_search_pallas``.
+
+    Exported for the static VMEM estimator in ``repro.analysis.contracts``:
+    summing these blocks bounds what one grid step holds in VMEM, so the
+    budget check can run on a traced jaxpr instead of live hardware."""
+    levels, stride = words.shape
+    bq = min(block_q, max(batch, 1))
+    return [
+        ((bq, max_m), "int32"),            # pattern tile
+        ((bq,), "int32"),                  # lengths tile
+        ((levels * stride,), "uint32"),    # flattened words (resident)
+        ((levels * stride,), "int32"),     # flattened ones_prefix (resident)
+        (tuple(zcount.shape), "int32"),    # zcount (resident)
+        (tuple(base.shape), "int32"),      # base = counts - sym_starts
+        ((bq,), "int32"),                  # lo out
+        ((bq,), "int32"),                  # hi out
+    ]
+
+
+def block_meta_bytes(meta) -> int:
+    """Total bytes of a block layout from ``backward_search_block_meta``."""
+    return sum(
+        int(math.prod(shape)) * np.dtype(dtype).itemsize
+        for shape, dtype in meta
+    )
 
 
 def _auto_interpret(interpret):
@@ -56,8 +102,9 @@ def backward_search(words, ones_prefix, zcount, base, patterns, lengths, *,
         0, max(max_m - 1, 0),
     )
     rev = jnp.take_along_axis(patterns, j, axis=1) if max_m else patterns
-    resident_bytes = sum(int(a.size) * 4 for a in (words, ones_prefix)) + \
-        int(zcount.size + base.size) * 4
+    resident_bytes = backward_search_resident_bytes(
+        words, ones_prefix, zcount, base
+    )
     if (
         B == 0 or max_m == 0 or base.shape[0] == 0
         or resident_bytes > BACKWARD_SEARCH_VMEM_BUDGET

@@ -345,7 +345,7 @@ def partitioned_train_step_fn(cfg: NequIPConfig, mesh, axes_all, n_graphs: int,
                     cfg, lp, ts_, tv_, tt_, src, dst, r, u, y2, N_loc
                 )
             else:
-                def chunk(carry, xs):
+                def chunk(carry, xs, lp=lp, ts_=ts_, tv_=tv_, tt_=tt_):
                     a_s, a_v, a_t = carry
                     sc, dc, rc, uc, yc = xs
                     d_s, d_v, d_t = _edge_messages(

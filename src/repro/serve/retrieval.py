@@ -599,6 +599,73 @@ class RetrievalService:
 
     # -- introspection --------------------------------------------------------
 
+    #: endpoint kinds with a compiled program per shape bucket (the compile
+    #: cache's key space; ``count`` rides the ``plan`` program)
+    ENDPOINT_KINDS = ("plan", "list", "topk", "tfidf")
+
+    def endpoint_program(self, kind: str, *, use_kernel: bool | None = None,
+                         max_df: int = 64, k: int = 10, max_buf: int = 512,
+                         conjunctive: bool = False):
+        """The exact fused program + example arguments the compile cache
+        would lower for ``kind`` — exposed so ``repro.analysis`` can audit
+        the jaxpr of every endpoint (launch counts, callbacks, dtypes,
+        VMEM) without executing anything.
+
+        Returns ``(fn, args_builder)`` where ``args_builder(B, m)`` makes
+        the padded example arguments for a (batch-bucket, length-bucket)
+        signature.  ``use_kernel=None`` inherits the service's backend."""
+        if use_kernel is None:
+            use_kernel = self.use_search_kernel
+        if kind == "plan":
+            fn = functools.partial(_plan_program, use_kernel)
+
+            def args(B, m):
+                return (self.csa, self.sada) + self._audit_batch(B, m)
+        elif kind == "list":
+            fn = functools.partial(
+                _list_program, max_df, min(BRUTE_WINDOW_FLOOR, max_buf),
+                max_buf, use_kernel,
+            )
+
+            def args(B, m):
+                return (self.csa, self.ilcp, self.pdl_list, self.da,
+                        self.sada) + self._audit_batch(B, m)
+        elif kind == "topk":
+            fn = functools.partial(
+                _topk_program, k, self._topk_max_df(max_buf),
+                min(BRUTE_WINDOW_FLOOR, max_buf), max_buf, use_kernel,
+            )
+
+            def args(B, m):
+                return (self.csa, self.pdl_topk, self.sada) + \
+                    self._audit_batch(B, m)
+        elif kind == "tfidf":
+            fn = functools.partial(_tfidf_program, k, conjunctive, max_buf)
+
+            def args(B, m):
+                pats = jnp.zeros((B, 2, _bucket_len(m)), jnp.int32)
+                lens = jnp.ones((B, 2), jnp.int32)
+                return (self.csa, self.pdl_topk, self.sada, pats, lens)
+        else:
+            raise ValueError(f"unknown endpoint kind {kind!r}")
+        return fn, args
+
+    def _audit_batch(self, B: int, m: int):
+        pats = jnp.zeros((B, _bucket_len(m)), jnp.int32)
+        lens = jnp.ones(B, jnp.int32)
+        return pats, lens, jnp.float32(self.occ_df_threshold), jnp.int32(-1)
+
+    def trace_endpoint(self, kind: str, B: int = 8, m: int = 8, **kw):
+        """ClosedJaxpr of one endpoint program at a (B, m) bucket — the
+        auditor's raw material."""
+        fn, args = self.endpoint_program(kind, **kw)
+        return jax.make_jaxpr(fn)(*args(_bucket_batch(B), m))
+
+    def compiled_executables(self) -> dict:
+        """The live AOT compile cache, keyed (kind, statics) — exposed for
+        post-hoc audits of what this process actually lowered."""
+        return dict(self._cache)
+
     def space_report(self) -> dict:
         """Bits-per-character accounting in the paper's units."""
         n = self.coll.n

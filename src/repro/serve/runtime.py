@@ -72,6 +72,7 @@ After ``breaker_cooldown_s`` the next batch probes the full path
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import Counter, deque
 
@@ -299,11 +300,14 @@ class ServeRuntime:
             return []
         order = sorted(
             self._queue,
-            key=lambda r: (r.deadline if r.deadline is not None else np.inf, r.rid),
+            key=lambda r: (r.deadline if r.deadline is not None else math.inf, r.rid),
         )
         head = order[0]
         batch = [r for r in order if r.kind == head.kind][: self.config.max_batch]
-        slack = (head.deadline - now) if head.deadline is not None else np.inf
+        # Python float, not np.inf: a numpy float64 scalar here would leak
+        # into every latency comparison below (the dtype-width audit's
+        # host-side counterpart — the clock path stays pure Python floats)
+        slack = float(head.deadline - now) if head.deadline is not None else math.inf
         while len(batch) > 1:
             est = self.metrics.steady_ema_s.get((head.kind, _pow2_ceil(len(batch))))
             if est is None or est <= max(slack, 0.0) * _SLACK_SAFETY:
@@ -425,24 +429,31 @@ class ServeRuntime:
                 results = [0 if kind == "count" else [] for _ in reqs]
 
         end = self._clock()
-        elapsed = end - start
+        # injected clocks may hand back numpy scalars; the EMA and every
+        # overrun/latency figure below must stay Python floats or the
+        # widened dtype propagates into reported metrics arrays
+        elapsed = float(end - start)
         if key not in m.compile_s and path == "full":
             m.compile_s[key] = elapsed     # first run pays the AOT compile
         elif path == "full":
             prev = m.steady_ema_s.get(key)
             m.steady_ema_s[key] = (
                 elapsed if prev is None
-                else (1 - _EMA_ALPHA) * prev + _EMA_ALPHA * elapsed
+                else float((1 - _EMA_ALPHA) * prev + _EMA_ALPHA * elapsed)
             )
 
         answers = []
         for r, res in zip(reqs, results):
-            overrun = max(0.0, end - r.deadline) if r.deadline is not None else 0.0
+            overrun = (
+                max(0.0, float(end - r.deadline))
+                if r.deadline is not None else 0.0
+            )
             ans = Answer(
                 rid=r.rid, kind=kind, result=res,
                 degraded=path != "full", degrade_reason=reason,
                 deadline_missed=overrun > 0, overrun_s=overrun,
-                latency_s=end - r.submitted_at, retries=retries, path=path,
+                latency_s=float(end - r.submitted_at), retries=retries,
+                path=path,
             )
             self._account(ans)
             answers.append(ans)
@@ -474,8 +485,8 @@ class ServeRuntime:
                 rid=r.rid, kind=r.kind,
                 result=0 if r.kind == "count" else [],
                 degraded=True, degrade_reason="deadline:empty",
-                deadline_missed=True, overrun_s=now - r.deadline,
-                latency_s=now - r.submitted_at, path="empty",
+                deadline_missed=True, overrun_s=float(now - r.deadline),
+                latency_s=float(now - r.submitted_at), path="empty",
             )
             self._account(ans)
             answers.append(ans)

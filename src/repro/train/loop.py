@@ -59,7 +59,7 @@ def train(
     batch_fn: Callable,         # (step) -> batch
     n_steps: int,
     ckpt_dir: str,
-    opt_cfg: AdamWConfig = AdamWConfig(),
+    opt_cfg: AdamWConfig | None = None,
     ckpt_every: int = 20,
     keep_ckpts: int = 3,
     failure: Optional[FailureInjector] = None,
@@ -69,6 +69,7 @@ def train(
     param_specs=None,
 ) -> TrainResult:
     params = init_params_fn()
+    opt_cfg = opt_cfg if opt_cfg is not None else AdamWConfig()
     opt_state = adamw_init(params, opt_cfg)
     err_state = init_error_state(params) if compress_grads else None
     start_step = 0

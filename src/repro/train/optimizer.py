@@ -26,7 +26,8 @@ class AdamWConfig:
     grad_clip: float | None = 1.0
 
 
-def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+def adamw_init(params, cfg: AdamWConfig | None = None):
+    cfg = cfg if cfg is not None else AdamWConfig()
     zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
     return {
         "m": jax.tree.map(zeros, params),
@@ -35,7 +36,7 @@ def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
     }
 
 
-def abstract_opt_state(params, cfg: AdamWConfig = AdamWConfig()):
+def abstract_opt_state(params, cfg: AdamWConfig | None = None):
     return jax.eval_shape(lambda: adamw_init(params, cfg))
 
 

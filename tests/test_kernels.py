@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.analysis.jaxpr import count_primitive
 from repro.kernels import ops, ref
 from repro.kernels.backward_search import backward_search_pallas
 from repro.kernels.embedding_bag import csr_to_padded, embedding_bag_pallas
@@ -16,14 +17,6 @@ from repro.succinct.rmq import rmq_build
 from repro.succinct.wavelet import wm_build
 
 RNG = np.random.default_rng(53)
-
-
-def count_eqns(jaxpr, name: str) -> int:
-    """Occurrences of a primitive in a jaxpr, descending into sub-jaxprs."""
-    total = sum(1 for eqn in jaxpr.eqns if eqn.primitive.name == name)
-    for sub in jax.core.subjaxprs(jaxpr):
-        total += count_eqns(sub, name)
-    return total
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +268,7 @@ def test_backward_search_odd_shape_fallback(monkeypatch):
             wm.words, wm.ones_prefix, wm.zcount, base, p, l,
             n=n, sigma=sigma, interpret=True,
         )
-        return count_eqns(jax.make_jaxpr(fn)(pats, lens).jaxpr, "pallas_call")
+        return count_primitive(jax.make_jaxpr(fn)(pats, lens).jaxpr, "pallas_call")
 
     # B == 0
     e_pats = jnp.zeros((0, max_m), jnp.int32)
@@ -333,8 +326,8 @@ def test_backward_search_single_launch():
         csa, p, l, use_kernel=True, interpret=True
     )
     fall = lambda p, l: csa_search_planned(csa, p, l, use_kernel=False)  # noqa: E731
-    assert count_eqns(jax.make_jaxpr(kern)(pats, lens).jaxpr, "pallas_call") == 1
-    assert count_eqns(jax.make_jaxpr(fall)(pats, lens).jaxpr, "pallas_call") == 0
+    assert count_primitive(jax.make_jaxpr(kern)(pats, lens).jaxpr, "pallas_call") == 1
+    assert count_primitive(jax.make_jaxpr(fall)(pats, lens).jaxpr, "pallas_call") == 0
 
     lo_k, hi_k = kern(pats, lens)
     lo_f, hi_f = fall(pats, lens)
@@ -358,8 +351,8 @@ def test_pair_descent_halves_gathers():
     dual = jax.make_jaxpr(
         lambda c, a, b: (wm_rank_batch(wm, c, a), wm_rank_batch(wm, c, b))
     )(c, lo, hi)
-    g_pair = count_eqns(pair.jaxpr, "gather")
-    g_dual = count_eqns(dual.jaxpr, "gather")
+    g_pair = count_primitive(pair.jaxpr, "gather")
+    g_dual = count_primitive(dual.jaxpr, "gather")
     # pair: 2 rank gathers/level + one sym_starts lookup outside the loop;
     # dual: 4 rank gathers/level (each wm_rank carries a (start, end) pair)
     assert g_pair * 2 <= g_dual + 2, (g_pair, g_dual)

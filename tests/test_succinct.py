@@ -149,7 +149,7 @@ def test_wavelet_rank_access(sigma):
     # rank_c at a grid of positions
     for c in range(sigma):
         pos = jnp.asarray([0, 1, n // 3, n // 2, n])
-        r = jax.vmap(lambda i: wm_rank(wm, c, i))(pos)
+        r = jax.vmap(lambda i, c=c: wm_rank(wm, c, i))(pos)
         exp = [int(np.sum(seq[:p] == c)) for p in np.asarray(pos)]
         np.testing.assert_array_equal(np.asarray(r), exp)
 

@@ -95,14 +95,14 @@ def test_tfidf_matches_oracle(fixture, terms, conj, k):
     ]
     exp = oracle_tfidf(docs, data, terms, k, conj)
     assert [g[0] for g in got] == [e[0] for e in exp], (terms, conj, got, exp)
-    for (gd, gw), (ed, ew) in zip(got, exp):
+    for (_gd, gw), (_ed, ew) in zip(got, exp):
         assert abs(gw - ew) < 1e-3, (terms, conj)
 
 
 def test_tfidf_batch(fixture):
     docs, coll, data, csa, pdl, sada = fixture
     rs, vs = [], []
-    for terms, conj in QUERIES[:4]:
+    for terms, _conj in QUERIES[:4]:
         r, v = ranges_for(data, terms)
         rs.append(r)
         vs.append(v)
