@@ -21,28 +21,38 @@ The planner stage (plan_queries: search + df + occ + dispatch) is timed on
 both the kernel and fallback paths, since that is the serving-layer stage
 the fusion targets.
 
+A docs-mesh sweep (``--shards``, default {1, 2, 4, 8} where the host has
+the devices) times the *sharded* planner program: per-shard CSA stacks,
+one kernel launch per shard, psum-merged occ/df.  Every result row carries
+a ``mesh_shape`` field and the per-launch resident wavelet-matrix bytes,
+so the artifact shows the VMEM footprint dropping with the shard count —
+the restoration mechanism for over-budget indexes.  The JSON is written to
+``--out`` and mirrored at a repo-root ``BENCH_backward_search.json``.
+
     PYTHONPATH=src python -m benchmarks.backward_search_bench \
-        [--out experiments/BENCH_backward_search.json] [--smoke]
+        [--out experiments/BENCH_backward_search.json] [--shards 1 2 4 8] \
+        [--smoke]
 """
 
 from __future__ import annotations
 
 import argparse
-import json
-import os
+import functools
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_collections, emit, time_batched
+from benchmarks.common import bench_collections, emit, time_batched, write_json
 from repro.core.csa import build_csa, csa_search_batch, csa_search_planned
 from repro.core.sada import build_sada
-from repro.core.suffix import build_suffix_data
+from repro.core.suffix import build_suffix_data, subcollection
 from repro.data.collections import pad_patterns, random_substring_patterns
+from repro.kernels import ops
 from repro.serve.planner import plan_queries
 
 BATCH_SIZES = (1, 16, 128)
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def count_eqns(jaxpr, name: str) -> int:
@@ -59,9 +69,56 @@ def _workload(coll, B: int, rng):
     return jnp.asarray(arr), jnp.asarray(lens)
 
 
+def _resident_bytes(csa):
+    return ops.backward_search_resident_bytes(
+        csa.wm.words, csa.wm.ones_prefix, csa.wm.zcount,
+        csa.counts[: csa.sigma] - csa.wm.sym_starts,
+    )
+
+
+def _sharded_plan_variants(coll, n_shards: int):
+    """Jitted sharded planner programs (kernel + fallback) over per-shard
+    CSA/Sada stacks, plus the max per-launch resident bytes.
+
+    Only the structures ``plan_queries`` touches are built — the docs-mesh
+    plan program ignores the ILCP/PDL slots of each shard tuple, so the
+    sweep does not pay for listing/top-k index construction."""
+    from repro.dist.sharding import doc_shard_bounds, make_docs_mesh
+    from repro.serve.sharded import _sharded_plan_program
+
+    mesh = make_docs_mesh(n_shards)
+    bounds = doc_shard_bounds(coll.d, n_shards)
+    shard_idx, resident = [], 0
+    for dlo, dhi in bounds:
+        sub = subcollection(coll, dlo, dhi)
+        data = build_suffix_data(sub)
+        csa = build_csa(data)
+        sada = build_sada(data, "sparse")
+        shard_idx.append((csa, None, None, None, sada, None))
+        resident = max(resident, _resident_bytes(csa))
+    shard_idx = tuple(shard_idx)
+    bases = tuple(b[0] for b in bounds)
+
+    def fn(use_kernel, p, l):
+        return _sharded_plan_program(
+            mesh, bases, use_kernel, shard_idx, p, l,
+            jnp.float32(4.0), jnp.int32(-1),
+        )
+
+    return {
+        f"plan-sharded{n_shards}-fallback": jax.jit(functools.partial(fn, False)),
+        f"plan-sharded{n_shards}-kernel": jax.jit(functools.partial(fn, True)),
+    }, resident
+
+
 def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
-        iters: int = 5, out: str | None = None):
+        iters: int = 5, out: str | None = None, shard_counts=SHARD_COUNTS):
     rows, results = [], []
+    feasible = [s for s in shard_counts if 1 < s <= jax.device_count()]
+    skipped = [s for s in shard_counts if s > jax.device_count()]
+    if skipped:
+        print(f"shard sweep: skipping {skipped} "
+              f"(only {jax.device_count()} devices)")
     for name in collections:
         coll = bench_collections()[name]
         data = build_suffix_data(coll)
@@ -90,43 +147,63 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
                     csa, sada, p, l, 4.0, -1, use_kernel=True)
             ),
         }
+        global_resident = _resident_bytes(csa)
+        # variant -> (fn, mesh_shape, max resident bytes per kernel launch)
+        meta = {v: (fn, [1], global_resident)
+                for v, fn in {**search_variants, **plan_variants}.items()}
+        # sharded planner sweep on the first collection only: per-shard
+        # index build cost is real, and one collection shows the scaling
+        if name == collections[0]:
+            for n_shards in feasible:
+                sharded, resident = _sharded_plan_variants(coll, n_shards)
+                meta.update({v: (fn, [n_shards], resident)
+                             for v, fn in sharded.items()})
 
         for B in batch_sizes:
             pats, lens = _workload(coll, B, rng)
-            for variant, fn in {**search_variants, **plan_variants}.items():
+            ref_lo, ref_hi = search_variants["legacy-dual-descent"](pats, lens)
+            for variant, (fn, mesh_shape, resident) in meta.items():
                 closed = jax.make_jaxpr(fn)(pats, lens)
                 launches = count_eqns(closed.jaxpr, "pallas_call")
                 gathers = count_eqns(closed.jaxpr, "gather")
                 med, got = time_batched(fn, pats, lens, iters=iters)
                 # every variant must agree on the integers
-                ref_lo, ref_hi = search_variants["legacy-dual-descent"](
-                    pats, lens
-                )
                 if variant in search_variants:
                     lo, hi = got
                     assert np.array_equal(np.asarray(lo), np.asarray(ref_lo))
                     assert np.array_equal(np.asarray(hi), np.asarray(ref_hi))
-                else:
+                elif variant in plan_variants:
                     assert np.array_equal(np.asarray(got.lo), np.asarray(ref_lo))
+                else:
+                    # sharded plan: shard-local occ sums psum to global occ
+                    occ = np.asarray(got[3])
+                    assert np.array_equal(
+                        occ, np.asarray(ref_hi) - np.asarray(ref_lo)
+                    )
                 ms = med * 1e3
-                rows.append([name, variant, B, round(ms, 3), launches, gathers])
+                rows.append([name, variant, B, mesh_shape[0],
+                             round(ms, 3), launches, gathers])
                 results.append(
                     {
                         "collection": name,
                         "variant": variant,
                         "batch": B,
+                        "mesh_shape": mesh_shape,
                         "median_ms": round(ms, 4),
                         "pallas_launches_per_batch": launches,
                         "gather_eqns": gathers,
+                        "max_resident_bytes_per_launch": int(resident),
+                        "vmem_budget_bytes": int(ops.BACKWARD_SEARCH_VMEM_BUDGET),
                     }
                 )
-    emit(rows, ["collection", "variant", "batch", "median_ms",
+    emit(rows, ["collection", "variant", "batch", "shards", "median_ms",
                 "pallas_launches", "gather_eqns"])
-    if out:
-        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-        with open(out, "w") as f:
-            json.dump({"results": results, "failures": []}, f, indent=1)
-        print(f"wrote {out}")
+    payload = {
+        "results": results,
+        "device_count": jax.device_count(),
+        "failures": [],
+    }
+    write_json(out, payload, "BENCH_backward_search.json")
     return rows
 
 
@@ -134,14 +211,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/BENCH_backward_search.json")
     ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--shards", type=int, nargs="*", default=list(SHARD_COUNTS),
+                    help="docs-mesh shard counts for the sharded planner "
+                         "sweep (1 = unsharded; counts past the device "
+                         "count are skipped)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one collection, tiny batches, 2 iters")
     args = ap.parse_args()
     if args.smoke:
         run(collections=("version-p001",), batch_sizes=(1, 16), iters=2,
-            out=args.out)
+            out=args.out, shard_counts=tuple(args.shards))
     else:
-        run(batch_sizes=tuple(args.batches), out=args.out)
+        run(batch_sizes=tuple(args.batches), out=args.out,
+            shard_counts=tuple(args.shards))
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ the repetitiveness parameters (d, mutation rates) match Section 6.1.
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -21,6 +22,8 @@ import numpy as np
 import jax
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _CACHE: dict = {}
 
@@ -79,3 +82,19 @@ def emit(rows, header):
         print(",".join(str(x) for x in row))
     print()
     return rows
+
+
+def write_json(out, payload: dict, root_name: str):
+    """Write the bench artifact to ``out`` and mirror it at the repo root
+    (``root_name``) so the latest numbers sit next to ROADMAP.md without
+    digging through experiments/."""
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {out}")
+    root_path = os.path.join(REPO_ROOT, root_name)
+    if os.path.abspath(out or "") != root_path:
+        with open(root_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {root_path}")

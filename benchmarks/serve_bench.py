@@ -20,8 +20,16 @@ answers flagged) with no deadline missed by more than one batch interval.
 The JSON gains a ``"resilience"`` block with ``degraded_fraction`` and
 ``deadline_miss_rate``.
 
+A third section sweeps the docs-mesh sharded service over shard counts
+(``--shards``, default {1, 2, 4, 8} on a virtualized host mesh): each
+result row carries a ``mesh_shape`` field, so the artifact records the
+per-shard-count serving cost next to the single-device numbers.  The JSON
+is written both to ``--out`` and to a repo-root ``BENCH_serve.json`` so
+the perf trajectory is visible without digging into experiments/.
+
     PYTHONPATH=src python -m benchmarks.serve_bench \
         [--out experiments/BENCH_serve.json] \
+        [--shards 1 2 4 8] \
         [--inject executor_fail,slow_pdl,compile_error]
 """
 
@@ -29,21 +37,35 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import numpy as np
+import jax
 
-from benchmarks.common import bench_collections, emit
+from benchmarks.common import bench_collections, emit, write_json
 from repro.data.collections import random_substring_patterns
 from repro.serve import faults
 from repro.serve.retrieval import RetrievalService
 from repro.serve.runtime import RuntimeConfig, ServeRuntime
 
 BATCH_SIZES = (1, 16, 128)
+SHARD_COUNTS = (1, 2, 4, 8)
 ITERS = 20
 RESILIENCE_QUERIES = 512
 DEFAULT_INJECT = "executor_fail,slow_pdl,compile_error"
+
+
+def _build_service(coll, n_shards: int, **kw):
+    """The service under test: plain at 1 shard, docs-mesh sharded above.
+
+    Returns (service, mesh_shape) — ``mesh_shape`` goes verbatim into the
+    result rows so the artifact distinguishes sweep points."""
+    if n_shards <= 1:
+        return RetrievalService.build(coll, **kw), [1]
+    from repro.dist.sharding import make_docs_mesh
+
+    mesh = make_docs_mesh(n_shards)
+    return RetrievalService.build(coll, mesh=mesh, **kw), [n_shards]
 
 
 def _timed(fn, iters: int = ITERS, warmup: int = 1):
@@ -64,15 +86,19 @@ def _timed(fn, iters: int = ITERS, warmup: int = 1):
 def run_resilience(collection: str = "version-p001",
                    inject: str = DEFAULT_INJECT, rate: float = 0.1,
                    n_queries: int = RESILIENCE_QUERIES, batch: int = 8,
-                   deadline_s: float = 0.5, seed: int = 0) -> dict:
+                   deadline_s: float = 0.5, seed: int = 0,
+                   n_shards: int = 1) -> dict:
     """Push ``n_queries`` through ServeRuntime with faults firing at
-    ``rate`` and report the resilience contract's metrics."""
+    ``rate`` and report the resilience contract's metrics.  With
+    ``n_shards > 1`` the runtime fronts the docs-mesh sharded service —
+    the degradation ladder (retry, floor, host reference merge) must hold
+    there too."""
     coll = bench_collections()[collection]
     # pin the Brute-L window: the grow-only dispatch-aware sizing would
     # recompile a bucket mid-run when a higher-occ pattern shows up, and
     # those compiles would read as deadline misses rather than resilience
-    svc = RetrievalService.build(coll, block_size=32, beta=8.0,
-                                 brute_window=512)
+    svc, mesh_shape = _build_service(coll, n_shards, block_size=32, beta=8.0,
+                                     brute_window=512)
     workload = random_substring_patterns(coll, max(n_queries, 64), 6, 64)
     rng = np.random.default_rng(seed)
     rt = ServeRuntime(svc, RuntimeConfig(max_batch=batch,
@@ -112,6 +138,7 @@ def run_resilience(collection: str = "version-p001",
     interval_s = float(np.percentile(np.asarray(batch_lat), 99))
     res = {
         "collection": collection,
+        "mesh_shape": mesh_shape,
         "inject": inject,
         "fault_rate": rate,
         "faults_fired": len(inj.fired),
@@ -139,10 +166,55 @@ def run_resilience(collection: str = "version-p001",
     return res
 
 
+def _bench_endpoints(svc, name, mesh_shape, workload, batch_sizes,
+                     k, max_df, max_buf, iters, rows, results):
+    rng = np.random.default_rng(0)
+    for B in batch_sizes:
+        idx = rng.integers(0, len(workload), size=(iters + 1, B))
+        batches = [[workload[i] for i in row] for row in idx]
+        it = iter(range(10_000))
+
+        def batch(batches=batches, it=it):
+            return batches[next(it) % len(batches)]
+
+        def pairs(b):
+            return [b[i : i + 2] for i in range(0, len(b), 2)] or [b[:1]]
+
+        endpoints = {
+            "plan": lambda svc=svc, batch=batch: svc.plan(batch()),
+            "list": lambda svc=svc, batch=batch: svc.list_docs(
+                batch(), max_df=max_df, max_buf=max_buf),
+            "topk": lambda svc=svc, batch=batch: svc.topk(batch(), k=k, max_buf=max_buf),
+            "tfidf": lambda svc=svc, batch=batch, pairs=pairs: svc.tfidf(
+                pairs(batch()), k=k, max_buf=max_buf),
+        }
+        for ep, fn in endpoints.items():
+            p50, p99, mean = _timed(fn, iters=iters, warmup=iters + 1)
+            nq = B if ep != "tfidf" else max(1, B // 2)
+            qps = nq / (mean / 1e3)
+            rows.append(
+                [name, ep, B, mesh_shape[0],
+                 round(p50, 2), round(p99, 2), round(qps, 0)]
+            )
+            results.append(
+                {
+                    "collection": name,
+                    "endpoint": ep,
+                    "batch": B,
+                    "mesh_shape": mesh_shape,
+                    "p50_ms": round(p50, 3),
+                    "p99_ms": round(p99, 3),
+                    "qps": round(qps, 1),
+                    "compiles": dict(svc.compile_counts),
+                }
+            )
+
+
 def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         k: int = 10, max_df: int = 128, max_buf: int = 1024,
         out: str | None = None, iters: int = ITERS,
-        inject: str = DEFAULT_INJECT, resilience_queries: int = RESILIENCE_QUERIES):
+        inject: str = DEFAULT_INJECT, resilience_queries: int = RESILIENCE_QUERIES,
+        shard_counts=SHARD_COUNTS):
     rows, results = [], []
     for name in collections:
         coll = bench_collections()[name]
@@ -150,54 +222,46 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         workload = random_substring_patterns(coll, 1500, 6, 256)
         if not workload:
             continue
-        rng = np.random.default_rng(0)
+        _bench_endpoints(svc, name, [1], workload, batch_sizes,
+                         k, max_df, max_buf, iters, rows, results)
 
-        for B in batch_sizes:
-            idx = rng.integers(0, len(workload), size=(iters + 1, B))
-            batches = [[workload[i] for i in row] for row in idx]
-            it = iter(range(10_000))
+    # shard-count sweep on the first collection: the same endpoints through
+    # the docs-mesh service, one row per (endpoint, batch, mesh shape).
+    # Shard counts past the (virtualized) device count are skipped loudly —
+    # the artifact's mesh_shape column shows exactly what ran.
+    feasible = [s for s in shard_counts if 1 < s <= jax.device_count()]
+    skipped = [s for s in shard_counts if s > jax.device_count()]
+    if skipped:
+        print(f"shard sweep: skipping {skipped} "
+              f"(only {jax.device_count()} devices)")
+    sweep_coll = bench_collections()[collections[0]]
+    sweep_load = random_substring_patterns(sweep_coll, 1500, 6, 256)
+    for n_shards in feasible:
+        svc, mesh_shape = _build_service(
+            sweep_coll, n_shards, block_size=32, beta=8.0, brute_window=512,
+        )
+        _bench_endpoints(svc, collections[0], mesh_shape, sweep_load,
+                         batch_sizes, k, max_df, max_buf, iters, rows, results)
 
-            def batch(batches=batches, it=it):
-                return batches[next(it) % len(batches)]
-
-            def pairs(b):
-                return [b[i : i + 2] for i in range(0, len(b), 2)] or [b[:1]]
-
-            endpoints = {
-                "plan": lambda svc=svc, batch=batch: svc.plan(batch()),
-                "list": lambda svc=svc, batch=batch: svc.list_docs(
-                    batch(), max_df=max_df, max_buf=max_buf),
-                "topk": lambda svc=svc, batch=batch: svc.topk(batch(), k=k, max_buf=max_buf),
-                "tfidf": lambda svc=svc, batch=batch, pairs=pairs: svc.tfidf(
-                    pairs(batch()), k=k, max_buf=max_buf),
-            }
-            for ep, fn in endpoints.items():
-                p50, p99, mean = _timed(fn, iters=iters, warmup=iters + 1)
-                nq = B if ep != "tfidf" else max(1, B // 2)
-                qps = nq / (mean / 1e3)
-                rows.append(
-                    [name, ep, B, round(p50, 2), round(p99, 2), round(qps, 0)]
-                )
-                results.append(
-                    {
-                        "collection": name,
-                        "endpoint": ep,
-                        "batch": B,
-                        "p50_ms": round(p50, 3),
-                        "p99_ms": round(p99, 3),
-                        "qps": round(qps, 1),
-                        "compiles": dict(svc.compile_counts),
-                    }
-                )
-    emit(rows, ["collection", "endpoint", "batch", "p50_ms", "p99_ms", "qps"])
+    emit(rows, ["collection", "endpoint", "batch", "shards",
+                "p50_ms", "p99_ms", "qps"])
+    # resilience: unsharded, plus through the widest sharded service built
     resilience = run_resilience(collection=collections[0], inject=inject,
                                 n_queries=resilience_queries)
-    if out:
-        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
-        with open(out, "w") as f:
-            json.dump({"results": results, "resilience": resilience,
-                       "failures": []}, f, indent=1)
-        print(f"wrote {out}")
+    resilience_sharded = None
+    if feasible:
+        resilience_sharded = run_resilience(
+            collection=collections[0], inject=inject,
+            n_queries=resilience_queries, n_shards=max(feasible),
+        )
+    payload = {
+        "results": results,
+        "resilience": resilience,
+        "resilience_sharded": resilience_sharded,
+        "device_count": jax.device_count(),
+        "failures": [],
+    }
+    write_json(out, payload, "BENCH_serve.json")
     return rows
 
 
@@ -205,6 +269,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/BENCH_serve.json")
     ap.add_argument("--batches", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--shards", type=int, nargs="*", default=list(SHARD_COUNTS),
+                    help="docs-mesh shard counts to sweep (1 = unsharded; "
+                         "counts past the device count are skipped)")
     ap.add_argument("--inject", default=DEFAULT_INJECT,
                     help="fault specs for the resilience section "
                          "(repro.serve.faults names, 'name[:rate]' comma list)")
@@ -213,9 +280,11 @@ def main():
     args = ap.parse_args()
     if args.smoke:
         run(collections=("version-p001",), batch_sizes=(1, 16), iters=3,
-            out=args.out, inject=args.inject, resilience_queries=128)
+            out=args.out, inject=args.inject, resilience_queries=128,
+            shard_counts=tuple(args.shards))
     else:
-        run(batch_sizes=tuple(args.batches), out=args.out, inject=args.inject)
+        run(batch_sizes=tuple(args.batches), out=args.out, inject=args.inject,
+            shard_counts=tuple(args.shards))
 
 
 if __name__ == "__main__":

@@ -54,10 +54,20 @@ class EndpointContract:
     pallas_calls: int         # exact whole-program launch count
     max_gathers: int | None = None    # static gather-eqn ceiling
     vmem_budget: int | None = None    # bytes per pallas_call block set
+    #: collective primitives the program may contain.  () = none allowed
+    #: (single-device endpoints); the sharded merge stages allowlist
+    #: ("psum", "all_gather").
+    collectives_allowed: tuple = ()
+    #: marker for report grouping ("" = single-device, "docs" = sharded)
+    mesh_axis: str = ""
 
     @property
     def key(self) -> str:
-        return f"{self.kind}/B{self.bucket[0]}xm{self.bucket[1]}/{self.backend}"
+        pre = f"{self.mesh_axis}:" if self.mesh_axis else ""
+        return (
+            f"{pre}{self.kind}/B{self.bucket[0]}xm{self.bucket[1]}/"
+            f"{self.backend}"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,11 +108,49 @@ def build_registry(svc, buckets=((1, 8), (8, 8))) -> list[EndpointContract]:
             contracts.append(EndpointContract(
                 kind, bucket, "kernel_overbudget", pallas_calls=0,
             ))
-        # tfidf's term range search is batch-reshaped through the same CSA
-        # machinery but has no kernel path of its own yet
+        # tfidf's term range search runs batch-reshaped through the same
+        # planned CSA search: its whole [Q*T] term batch is ONE fused
+        # kernel launch on the kernel backend, zero on XLA / over-budget
+        contracts.append(EndpointContract(
+            "tfidf", bucket, "kernel", pallas_calls=1, vmem_budget=budget,
+        ))
         contracts.append(EndpointContract(
             "tfidf", bucket, "xla", pallas_calls=0,
         ))
+        contracts.append(EndpointContract(
+            "tfidf", bucket, "kernel_overbudget", pallas_calls=0,
+        ))
+    return contracts
+
+
+def build_sharded_registry(svc, buckets=((1, 8), (8, 8))) -> list[EndpointContract]:
+    """Contracts for a docs-mesh ShardedRetrievalService: per-shard launch
+    counts (the kernel path launches once PER SHARD — the unrolled
+    executors each carry their own shard's wavelet matrix), and the merge
+    stages may use ``psum`` / ``all_gather`` and nothing else."""
+    S = svc.n_shards
+    levels = max(int(sh.csa.wm.words.shape[0]) for sh in svc.shards)
+    # per-shard pair descents are unrolled: S times the single-index ceiling
+    ceiling = S * pair_descent_gather_ceiling(levels)
+    budget = ops.BACKWARD_SEARCH_VMEM_BUDGET
+    allowed = ("psum", "all_gather")
+    contracts = []
+    for bucket in buckets:
+        for kind in ("plan", "list", "topk", "tfidf"):
+            gath = ceiling if kind == "plan" else None
+            contracts.append(EndpointContract(
+                kind, bucket, "kernel", pallas_calls=S, max_gathers=gath,
+                vmem_budget=budget, collectives_allowed=allowed,
+                mesh_axis="docs",
+            ))
+            contracts.append(EndpointContract(
+                kind, bucket, "xla", pallas_calls=0, max_gathers=gath,
+                collectives_allowed=allowed, mesh_axis="docs",
+            ))
+            contracts.append(EndpointContract(
+                kind, bucket, "kernel_overbudget", pallas_calls=0,
+                collectives_allowed=allowed, mesh_axis="docs",
+            ))
     return contracts
 
 
@@ -128,6 +176,15 @@ def audit_jaxpr(traced, contract: EndpointContract) -> list[Violation]:
                 f"ceiling {contract.max_gathers} — a second wavelet descent "
                 f"(or per-boundary rank calls) crept back into the range "
                 f"search"
+            )))
+
+    for eqn in jx.collective_eqns(traced):
+        if eqn.primitive.name not in contract.collectives_allowed:
+            allowed = ", ".join(contract.collectives_allowed) or "none"
+            out.append(Violation(key, "collective", (
+                f"collective primitive {eqn.primitive.name!r} in the "
+                f"program; this endpoint allows {allowed} — merge stages "
+                f"are restricted to the psum/all_gather reduction algebra"
             )))
 
     for eqn in jx.find_host_callbacks(traced):
@@ -172,29 +229,19 @@ def trace_for_contract(svc, contract: EndpointContract):
     return svc.trace_endpoint(contract.kind, B, m, use_kernel=use_kernel)
 
 
-def audit_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]:
-    """Audit every (kind x bucket x backend) contract of a service.
-
-    Returns (report, violations): the report lists each audited contract
-    with its measured numbers (launches, gathers, VMEM estimate) so the CI
-    artifact doubles as a lowering-cost trend record."""
-    registry = build_registry(svc, buckets)
-    audited, violations = [], []
-    # static (metadata-level) VMEM estimate, independent of tracing: the
-    # same block layout the kernel wrapper will claim for this index
-    wm = svc.csa.wm
-    base = svc.csa.counts[: svc.csa.sigma] - wm.sym_starts
-    meta_bytes = ops.block_meta_bytes(ops.backward_search_block_meta(
+def _csa_static_vmem_bytes(csa, buckets) -> int:
+    """Static (metadata-level) VMEM estimate, independent of tracing: the
+    same block layout the kernel wrapper will claim for this index."""
+    wm = csa.wm
+    base = csa.counts[: csa.sigma] - wm.sym_starts
+    return ops.block_meta_bytes(ops.backward_search_block_meta(
         wm.words, wm.ones_prefix, wm.zcount, base,
         batch=max(b for b, _ in buckets), max_m=max(m for _, m in buckets),
     ))
-    if meta_bytes > ops.BACKWARD_SEARCH_VMEM_BUDGET:
-        violations.append(Violation(
-            "index/static", "vmem",
-            f"index block metadata claims ~{meta_bytes} bytes of VMEM, over "
-            f"the {ops.BACKWARD_SEARCH_VMEM_BUDGET}-byte budget — kernel "
-            f"launches on this index would be routed to XLA",
-        ))
+
+
+def _audit_contracts(svc, registry) -> tuple[list, list[Violation]]:
+    audited, violations = [], []
     for contract in registry:
         traced = trace_for_contract(svc, contract)
         vs = audit_jaxpr(traced, contract)
@@ -205,16 +252,75 @@ def audit_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]
             "pallas_calls": jx.count_primitive(traced, "pallas_call"),
             "gathers": jx.gather_count(traced),
             "gather_ceiling": contract.max_gathers,
+            "collectives": sorted(
+                {e.primitive.name for e in jx.collective_eqns(traced)}
+            ),
             "vmem_block_bytes": max(
                 (jx.pallas_block_bytes(e) for e in jx.pallas_eqns(traced)),
                 default=0,
             ),
             "ok": not vs,
         })
+    return audited, violations
+
+
+def audit_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]:
+    """Audit every (kind x bucket x backend) contract of a service.
+
+    Returns (report, violations): the report lists each audited contract
+    with its measured numbers (launches, gathers, VMEM estimate) so the CI
+    artifact doubles as a lowering-cost trend record."""
+    registry = build_registry(svc, buckets)
+    violations = []
+    meta_bytes = _csa_static_vmem_bytes(svc.csa, buckets)
+    if meta_bytes > ops.BACKWARD_SEARCH_VMEM_BUDGET:
+        violations.append(Violation(
+            "index/static", "vmem",
+            f"index block metadata claims ~{meta_bytes} bytes of VMEM, over "
+            f"the {ops.BACKWARD_SEARCH_VMEM_BUDGET}-byte budget — kernel "
+            f"launches on this index would be routed to XLA",
+        ))
+    audited, vs = _audit_contracts(svc, registry)
+    violations.extend(vs)
     report = {
         "contracts_audited": len(registry),
         "vmem_budget_bytes": ops.BACKWARD_SEARCH_VMEM_BUDGET,
         "index_static_vmem_bytes": meta_bytes,
+        "endpoints": audited,
+        "violations": [v.as_dict() for v in violations],
+    }
+    return report, violations
+
+
+def audit_sharded_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]:
+    """Audit a docs-mesh ShardedRetrievalService: the per-shard launch-count
+    contracts (kernel path = one ``pallas_call`` per shard), the
+    psum/all_gather collective allowlist, and the per-shard static VMEM
+    claims.  The per-shard VMEM check is the sharding payoff made a
+    contract: each shard's wavelet matrix must fit the budget even when the
+    unsharded index would not."""
+    registry = build_sharded_registry(svc, buckets)
+    violations = []
+    shard_meta = [
+        _csa_static_vmem_bytes(sh.csa, buckets) for sh in svc.shards
+    ]
+    for s, meta_bytes in enumerate(shard_meta):
+        if meta_bytes > ops.BACKWARD_SEARCH_VMEM_BUDGET:
+            violations.append(Violation(
+                f"docs:shard{s}/static", "vmem",
+                f"shard {s} block metadata claims ~{meta_bytes} bytes of "
+                f"VMEM, over the {ops.BACKWARD_SEARCH_VMEM_BUDGET}-byte "
+                f"budget — this shard's kernel launches would fall back to "
+                f"XLA; use more shards",
+            ))
+    audited, vs = _audit_contracts(svc, registry)
+    violations.extend(vs)
+    report = {
+        "mesh_axis": "docs",
+        "n_shards": svc.n_shards,
+        "contracts_audited": len(registry),
+        "vmem_budget_bytes": ops.BACKWARD_SEARCH_VMEM_BUDGET,
+        "shard_static_vmem_bytes": shard_meta,
         "endpoints": audited,
         "violations": [v.as_dict() for v in violations],
     }

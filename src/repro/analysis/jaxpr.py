@@ -94,6 +94,32 @@ def gather_count(jaxpr) -> int:
     return count_primitive(jaxpr, "gather")
 
 
+#: cross-device communication primitives.  The sharded serving programs
+#: allowlist ``psum`` / ``all_gather`` in their merge stages; anything else
+#: (or any collective in a single-device program) is a contract violation —
+#: an accidental ``all_to_all`` or ``ppermute`` in a merge is a silent
+#: bandwidth regression no correctness test notices.
+COLLECTIVE_PRIMITIVES = (
+    "psum",
+    "pmax",
+    "pmin",
+    "all_gather",
+    "all_to_all",
+    "ppermute",
+    "pshuffle",
+    "reduce_scatter",
+    "pbroadcast",
+    "pgather",
+)
+
+
+def collective_eqns(jaxpr) -> list:
+    """All cross-device collective eqns at any depth (shard_map bodies
+    included — ``iter_eqns`` descends through the shard_map eqn's jaxpr
+    param)."""
+    return find_primitives(jaxpr, COLLECTIVE_PRIMITIVES)
+
+
 def wide_dtype_eqns(jaxpr) -> list:
     """(eqn, dtype) for every eqn producing a 64-bit output.
 

@@ -215,12 +215,15 @@ class _FileLinter(ast.NodeVisitor):
                 f"direct time.{f.attr}() call in repro/serve/ — the runtime "
                 f"clock must be injectable"
             ))
-        # FJ001: fault hooks outside the instrumented serving module
+        # FJ001: fault hooks outside the instrumented serving modules
+        # (the single-device engine and its docs-mesh sharded counterpart —
+        # the fault-injection smoke exercises both)
         if self._is_fault_hook(node) and not self.is_faults_mod and \
-                not self.path.endswith("serve/retrieval.py"):
+                not self.path.endswith(("serve/retrieval.py",
+                                        "serve/sharded.py")):
             self.flag("FJ001", node, (
                 "fault site introduced outside the instrumented serving "
-                "module (repro/serve/retrieval.py)"
+                "modules (repro/serve/{retrieval,sharded}.py)"
             ))
         if isinstance(f, ast.Name) and f.id == "FaultInjectedError" and \
                 not self.is_faults_mod:

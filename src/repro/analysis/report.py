@@ -65,7 +65,12 @@ def run(argv=None) -> int:
 
     contract_violations = []
     if not args.lint_only:
-        from repro.analysis.contracts import audit_service
+        import jax
+
+        from repro.analysis.contracts import (
+            audit_service,
+            audit_sharded_service,
+        )
 
         buckets = tuple(
             (int(b), 8) for b in args.buckets.split(",") if b.strip()
@@ -75,6 +80,23 @@ def run(argv=None) -> int:
             svc, buckets=buckets
         )
         report["contracts"] = contracts_report
+
+        # sharded contracts need >1 device: audited when the host is
+        # virtualized (XLA_FLAGS=--xla_force_host_platform_device_count=N,
+        # the CI sharded-smoke step), skipped on a single-device host
+        if jax.device_count() >= 2:
+            from repro.dist.sharding import make_docs_mesh
+            from repro.serve.retrieval import RetrievalService
+
+            mesh = make_docs_mesh(min(4, jax.device_count()))
+            sharded = RetrievalService.build(
+                svc.coll, mesh=mesh, validate=False
+            )
+            sh_report, sh_violations = audit_sharded_service(
+                sharded, buckets=buckets
+            )
+            report["contracts_sharded"] = sh_report
+            contract_violations = contract_violations + sh_violations
 
     n_bad = len(lint_violations) + len(contract_violations)
     report["ok"] = n_bad == 0

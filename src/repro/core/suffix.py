@@ -105,6 +105,39 @@ def concat_documents(docs: Sequence) -> Collection:
     )
 
 
+def subcollection(coll: Collection, dlo: int, dhi: int) -> Collection:
+    """The contiguous document slice ``[dlo, dhi)`` of ``coll`` as its own
+    Collection — the unit a docs-axis shard indexes.
+
+    The slice keeps the parent's **global sigma**, so every shard's wavelet
+    matrix descends the same symbol levels and a pattern encodes identically
+    against every shard.  Because each document ends in its own terminator
+    and patterns never contain the terminator, a pattern's occurrences
+    inside documents ``[dlo, dhi)`` are exactly its occurrences inside the
+    slice: per-shard occ / df / document sets sum (resp. disjoint-union) to
+    the global answer.
+    """
+    if not (0 <= dlo <= dhi <= coll.d):
+        raise ValueError(f"document slice [{dlo}, {dhi}) out of range for d={coll.d}")
+    if dlo == dhi:
+        return Collection(
+            text=np.zeros(0, dtype=np.int32),
+            doc_starts=np.zeros(0, dtype=np.int32),
+            doc_ends=np.zeros(0, dtype=np.int32),
+            d=0,
+            sigma=coll.sigma,
+        )
+    base = int(coll.doc_starts[dlo])
+    stop = int(coll.doc_ends[dhi - 1]) + 1  # include the last terminator
+    return Collection(
+        text=np.ascontiguousarray(coll.text[base:stop]),
+        doc_starts=(coll.doc_starts[dlo:dhi] - base).astype(np.int32),
+        doc_ends=(coll.doc_ends[dlo:dhi] - base).astype(np.int32),
+        d=dhi - dlo,
+        sigma=coll.sigma,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Prefix-doubling suffix array (device) + retained rank tables
 # ---------------------------------------------------------------------------

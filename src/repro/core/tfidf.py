@@ -50,8 +50,26 @@ def tfidf_topk(
     k: int,
     conjunctive: bool,
     max_buf: int = 2048,
+    dfs=None,          # optional int32[T] per-term df override (sharded: global)
+    n_docs: int | None = None,  # optional d override for g(df) (sharded: global)
 ):
-    """Exact ranked-AND / ranked-OR top-k.  Returns (docs[k], scores[k])."""
+    """Exact ranked-AND / ranked-OR top-k.  Returns (docs[k], scores[k]).
+
+    Per-document scores are accumulated **term-major in a fixed order**:
+    each candidate document looks up its integer tf in every term's sorted
+    (doc, tf) list and folds ``tf * g(df)`` over the (static) term slots.
+    A document's float score therefore depends only on its own per-term tf
+    values and the weights — not on which other documents share the buffer
+    — which is what makes the cross-shard merge bit-identical: a document
+    scored inside one shard of a partitioned collection (with global ``dfs``
+    / ``n_docs`` injected) produces the exact float the unsharded program
+    produces.
+
+    ``dfs``/``n_docs`` default to this index's own Sada counts and ``pdl.d``
+    (the single-index behavior); the docs-sharded service passes the
+    psum-merged global df and the global document count so idf weights are
+    collection-wide.
+    """
     ranges = as_i32(ranges)
     T = ranges.shape[0]
     term_valid = jnp.asarray(term_valid, dtype=jnp.bool_)
@@ -59,82 +77,103 @@ def tfidf_topk(
     def per_term(rng, tv):
         lo, hi = rng[0], rng[1]
         docs, tf, nseg = pdl_doc_freqs(pdl, csa, lo, hi, max_buf=max_buf)
-        df = sada_count(sada, lo, hi)
-        w = idf_weight(pdl.d, df)
-        score = tf.astype(jnp.float32) * w
         keep = tv & (jnp.arange(max_buf, dtype=IDX) < nseg)
+        # rows stay sorted ascending: invalid tails are already BIG-padded
         docs = jnp.where(keep, docs, BIG)
-        score = jnp.where(keep, score, 0.0)
-        return docs, score
+        tf = jnp.where(keep, tf, 0)
+        return docs, tf
 
-    docs_t, score_t = jax.vmap(per_term)(ranges, term_valid)
-    flat_docs = docs_t.reshape(-1)
-    flat_scores = score_t.reshape(-1)
-    M = flat_docs.shape[0]
+    docs_t, tf_t = jax.vmap(per_term)(ranges, term_valid)   # [T, max_buf]
+    if dfs is None:
+        dfs = jax.vmap(lambda r: sada_count(sada, r[0], r[1]))(ranges)
+    w = idf_weight(pdl.d if n_docs is None else n_docs, dfs)  # f32[T]
 
-    order = jnp.argsort(flat_docs)
-    s_docs = flat_docs[order]
-    s_scores = flat_scores[order]
-    present = (s_docs < BIG).astype(IDX)
-
+    # candidate set: each distinct doc across all term lists exactly once
+    flat = docs_t.reshape(-1)
+    M = flat.shape[0]
+    s_docs = jnp.sort(flat)
     first = jnp.concatenate([jnp.ones(1, jnp.bool_), s_docs[1:] != s_docs[:-1]])
-    new_doc = first & (s_docs < BIG)
-    seg_id = jnp.cumsum(new_doc) - 1
-    nseg = jnp.sum(new_doc).astype(IDX)
-    total_valid = jnp.sum(present).astype(IDX)
+    cand_ok = first & (s_docs < BIG)
+    cand = jnp.where(cand_ok, s_docs, BIG)
 
-    pos = jnp.arange(M, dtype=IDX)
-    seg_starts = jnp.zeros(M + 1, IDX).at[
-        jnp.where(new_doc, seg_id, M + 1)
-    ].set(pos, mode="drop")
-    seg_starts = jnp.where(jnp.arange(M + 1, dtype=IDX) < nseg, seg_starts, total_valid)
+    # fixed-order weighted fold over the (static) term slots
+    score = jnp.zeros(M, jnp.float32)
+    seg_terms = jnp.zeros(M, IDX)
+    for t in range(T):
+        j = jnp.clip(jnp.searchsorted(docs_t[t], cand), 0, max_buf - 1)
+        hit = (docs_t[t][j] == cand) & cand_ok
+        score = score + jnp.where(hit, tf_t[t][j], 0).astype(jnp.float32) * w[t]
+        seg_terms = seg_terms + hit.astype(IDX)
 
-    cum_score = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(s_scores)])
-    cum_present = jnp.concatenate([jnp.zeros(1, IDX), jnp.cumsum(present)])
-    seg_score = cum_score[seg_starts[1:]] - cum_score[seg_starts[:-1]]
-    seg_terms = cum_present[seg_starts[1:]] - cum_present[seg_starts[:-1]]
-    seg_docs = s_docs[jnp.minimum(seg_starts[:M], M - 1)]
-    seg_ok = jnp.arange(M, dtype=IDX) < nseg
-
+    seg_ok = cand_ok
     n_required = jnp.sum(term_valid.astype(IDX))
     if conjunctive:
         seg_ok = seg_ok & (seg_terms == n_required)
 
-    # rank by (score desc, doc asc)
-    neg = jnp.where(seg_ok, -seg_score, jnp.float32(np.inf))
-    dkey = jnp.where(seg_ok, seg_docs, BIG)
-    order2 = jnp.lexsort((dkey, neg))
-    topd = dkey[order2[:k]]
-    tops = -neg[order2[:k]]
-    ok = topd < BIG
+    return rank_topk_scores(cand, score, seg_ok, k)
+
+
+def rank_topk_scores(docs, scores, ok, k: int):
+    """Rank by (score desc, doc asc), take k: (docs[k] padded -1,
+    scores[k] f32).  ``docs`` uses BIG for absent entries; the same total
+    order the cross-shard k-way merge applies, so merging per-shard top-k
+    lists through this function reproduces the unsharded ranking."""
+    neg = jnp.where(ok, -scores, jnp.float32(np.inf))
+    dkey = jnp.where(ok, docs, BIG)
+    order = jnp.lexsort((dkey, neg))
+    topd = dkey[order[:k]]
+    tops = -neg[order[:k]]
+    good = topd < BIG
     return (
-        jnp.where(ok, topd, -1).astype(IDX),
-        jnp.where(ok, tops, 0.0).astype(jnp.float32),
+        jnp.where(good, topd, -1).astype(IDX),
+        jnp.where(good, tops, 0.0).astype(jnp.float32),
     )
 
 
 def tfidf_topk_batch(
-    pdl, csa, sada, ranges_batch, term_valid_batch, k, conjunctive, max_buf=2048
+    pdl, csa, sada, ranges_batch, term_valid_batch, k, conjunctive, max_buf=2048,
+    dfs_batch=None, n_docs: int | None = None,
 ):
-    """vmap over a [Q, T, 2] batch of padded queries."""
+    """vmap over a [Q, T, 2] batch of padded queries.  ``dfs_batch``
+    (int32[Q, T]) and ``n_docs`` override the df / document-count inputs of
+    the idf weight — the sharded engine's global-statistics injection."""
+    ranges_batch = as_i32(ranges_batch)
+    term_valid_batch = jnp.asarray(term_valid_batch, dtype=jnp.bool_)
+    if dfs_batch is None:
+        return jax.vmap(
+            lambda r, tv: tfidf_topk(
+                pdl, csa, sada, r, tv, k, conjunctive, max_buf, n_docs=n_docs
+            )
+        )(ranges_batch, term_valid_batch)
     return jax.vmap(
-        lambda r, tv: tfidf_topk(pdl, csa, sada, r, tv, k, conjunctive, max_buf)
-    )(as_i32(ranges_batch), jnp.asarray(term_valid_batch, dtype=jnp.bool_))
+        lambda r, tv, df: tfidf_topk(
+            pdl, csa, sada, r, tv, k, conjunctive, max_buf,
+            dfs=df, n_docs=n_docs,
+        )
+    )(ranges_batch, term_valid_batch, as_i32(dfs_batch))
 
 
-def term_ranges_batch(csa: CSA, patterns, lengths):
+def term_ranges_batch(csa: CSA, patterns, lengths, *, use_kernel: bool | None = False):
     """Fused multi-term range finding for padded query batches.
 
     patterns: int32[Q, T, max_m] (term-padded, query-padded); lengths:
     int32[Q, T] with 0 marking absent term slots.  Returns
     (ranges int32[Q, T, 2], valid bool[Q, T]) — the exact input layout of
-    ``tfidf_topk_batch`` — in one backward-search program (no host loop)."""
-    from repro.core.csa import csa_search_batch
+    ``tfidf_topk_batch`` — in one backward-search program (no host loop).
+
+    ``use_kernel`` selects the range-search path exactly as the planner
+    does: ``True`` launches the whole [Q*T] term batch as ONE fused Pallas
+    backward search, ``False`` takes the XLA pair descent, ``None``
+    auto-detects (kernel iff TPU).  All paths are bit-identical."""
+    from repro.core.csa import csa_search_planned
 
     patterns = as_i32(patterns)
     lengths = as_i32(lengths)
     Q, T, m = patterns.shape
-    lo, hi = csa_search_batch(csa, patterns.reshape(Q * T, m), lengths.reshape(-1))
+    lo, hi = csa_search_planned(
+        csa, patterns.reshape(Q * T, m), lengths.reshape(-1),
+        use_kernel=use_kernel,
+    )
     hi = jnp.where(lengths.reshape(-1) > 0, hi, lo)
     ranges = jnp.stack([lo, hi], axis=-1).reshape(Q, T, 2)
     return ranges, lengths > 0

@@ -98,6 +98,15 @@ def zero_spec_for(spec: P, shape: tuple, axes: MeshAxes, dpn: int) -> P:
     if dpn <= 1:
         return spec
     entries = _norm(spec, len(shape))
+    used = {
+        ax
+        for entry in entries
+        if entry is not None
+        for ax in (entry if isinstance(entry, tuple) else (entry,))
+    }
+    if used & set(axes.dp):
+        return spec  # a dp axis already shards some dim; adding it again
+        # elsewhere would be an invalid duplicate-axis PartitionSpec
     best = -1
     for i, (entry, dim) in enumerate(zip(entries, shape)):
         if entry is not None:
@@ -217,6 +226,77 @@ def recsys_param_specs(params_abs, axes: MeshAxes, mesh, row_threshold: int = 1 
         return P()
 
     return jax.tree.map(spec, params_abs)
+
+
+# ---------------------------------------------------------------------------
+# Docs-axis sharding (document-retrieval index stack)
+# ---------------------------------------------------------------------------
+
+#: mesh axis name the retrieval index stack shards over
+DOCS_AXIS = "docs"
+
+
+def make_docs_mesh(n_shards: int):
+    """1-D ``(docs,)`` mesh of ``n_shards`` devices for the sharded index
+    stack.  On a CPU host, virtualize devices first with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before jax
+    imports; tests/conftest.py and the CI sharded-smoke step do this)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    avail = jax.device_count()
+    if n_shards > avail:
+        raise ValueError(
+            f"n_shards={n_shards} exceeds available devices ({avail}); "
+            "set --xla_force_host_platform_device_count"
+        )
+    return jax.make_mesh((n_shards,), (DOCS_AXIS,))
+
+
+def docs_mesh_size(mesh) -> int:
+    return int(mesh.shape[DOCS_AXIS])
+
+
+def doc_shard_bounds(d: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous document ranges [dlo, dhi) per shard, balanced to within
+    one document.  Every shard owns at least one document — build-time
+    empty shards are disallowed (an *empty-answer* shard, where a pattern
+    has no hits, is the degenerate case the merge handles)."""
+    if n_shards > d:
+        raise ValueError(
+            f"n_shards={n_shards} > d={d}: every shard must own >= 1 document"
+        )
+    base, extra = divmod(d, n_shards)
+    bounds = []
+    lo = 0
+    for s in range(n_shards):
+        hi = lo + base + (1 if s < extra else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def docs_stacked_spec(ndim: int) -> P:
+    """Spec for per-shard results stacked on a leading [S, ...] axis: shard
+    the leading dim over ``docs``, replicate the rest.  Applied via
+    ``jax.lax.with_sharding_constraint`` between the unrolled per-shard
+    executors and the shard_map merge stage."""
+    return P(DOCS_AXIS, *([None] * (ndim - 1)))
+
+
+def docs_replicated_spec() -> P:
+    """Placement of index pytree leaves and query batches: replicated over
+    the docs mesh.  jax.jit rejects mixed single-device placements, so
+    per-shard index leaves live replicated; true per-device residency of
+    shard s's leaves on device s only is the multi-host follow-up
+    (docs/SHARDING.md)."""
+    return P()
+
+
+def docs_index_shardings(mesh, pytree):
+    """NamedShardings for device_put of a (per-shard or global) index
+    pytree onto the docs mesh — every leaf replicated."""
+    sh = jax.NamedSharding(mesh, docs_replicated_spec())
+    return jax.tree.map(lambda _: sh, pytree)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,23 @@ def backward_search_resident_bytes(words, ones_prefix, zcount, base) -> int:
     return int(words.size + ones_prefix.size + zcount.size + base.size) * 4
 
 
+def shards_to_fit(resident_bytes: int,
+                  budget: int | None = None) -> int:
+    """Smallest docs-mesh shard count that brings a wavelet matrix of
+    ``resident_bytes`` under the kernel's VMEM budget, assuming the
+    balanced contiguous document split of ``doc_shard_bounds`` (each
+    shard's matrix is ~1/S of the whole: same levels, 1/S of the text).
+
+    Sizing hint for ``RetrievalService.build(mesh=...)`` — the serving
+    layer restores the fused kernel path for over-budget indexes by
+    sharding; see docs/SHARDING.md."""
+    if budget is None:
+        budget = BACKWARD_SEARCH_VMEM_BUDGET
+    if budget <= 0:
+        raise ValueError("budget must be positive")
+    return max(1, -(-resident_bytes // budget))
+
+
 def backward_search_block_meta(words, ones_prefix, zcount, base,
                                batch: int, max_m: int, *,
                                block_q: int = 256) -> list:

@@ -65,6 +65,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per partition
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo, scan_trips=cell.meta.get("scan_trips", 1))
     rl = roofline_terms(

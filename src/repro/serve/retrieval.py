@@ -202,12 +202,14 @@ def _topk_program(
 
 
 def _tfidf_program(
-    k, conjunctive, max_buf,
+    k, conjunctive, max_buf, use_kernel,
     csa, pdl_t, sada, patterns, lengths,
 ):
     """Multi-term ranked query as one program: fused term range search +
-    batched ranked-AND/OR scoring."""
-    ranges, valid = term_ranges_batch(csa, patterns, lengths)
+    batched ranked-AND/OR scoring.  ``use_kernel`` selects the same
+    backward-search backend as the planner (True = one fused Pallas launch
+    for the whole [Q*T] term batch)."""
+    ranges, valid = term_ranges_batch(csa, patterns, lengths, use_kernel=use_kernel)
     return tfidf_topk_batch(
         pdl_t, csa, sada, ranges, valid, k, conjunctive, max_buf=max_buf
     )
@@ -241,7 +243,19 @@ class RetrievalService:
         use_search_kernel: bool | None = None,
         brute_window: int | None = None,
         validate: bool = True,
+        mesh=None,
     ):
+        if mesh is not None:
+            # docs-axis sharded service: contiguous document shards, each
+            # with its own index stack, merged on-device (docs/SHARDING.md)
+            from repro.serve.sharded import ShardedRetrievalService
+
+            return ShardedRetrievalService.build(
+                coll, mesh, block_size=block_size, beta=beta,
+                sada_variant=sada_variant, sample_rate=sample_rate,
+                use_search_kernel=use_search_kernel,
+                brute_window=brute_window, validate=validate,
+            )
         data = build_suffix_data(coll)
         if use_search_kernel is None:
             # backend auto-detection: the fused backward-search kernel is
@@ -477,7 +491,9 @@ class RetrievalService:
         args = (self.csa, self.pdl_topk, self.sada, pats, lens)
         exe = self._compiled(
             "tfidf", (pats.shape, k, conjunctive, max_buf),
-            lambda: functools.partial(_tfidf_program, k, conjunctive, max_buf),
+            lambda: functools.partial(
+                _tfidf_program, k, conjunctive, max_buf, self.use_search_kernel
+            ),
             args,
         )
         docs, scores = exe(*args)
@@ -640,7 +656,9 @@ class RetrievalService:
                 return (self.csa, self.pdl_topk, self.sada) + \
                     self._audit_batch(B, m)
         elif kind == "tfidf":
-            fn = functools.partial(_tfidf_program, k, conjunctive, max_buf)
+            fn = functools.partial(
+                _tfidf_program, k, conjunctive, max_buf, use_kernel
+            )
 
             def args(B, m):
                 pats = jnp.zeros((B, 2, _bucket_len(m)), jnp.int32)

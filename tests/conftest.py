@@ -13,14 +13,26 @@ native compiler (segfault inside ``backend_compile`` on the next large
 vmapped while-loop program).  Dropping jax's program caches between test
 modules keeps the JIT arena bounded; within a module, caches (and
 therefore compile counts asserted by the serving tests) are untouched.
+
+Host-device virtualization: the docs-mesh sharding tests need several
+devices, and ``--xla_force_host_platform_device_count`` only takes effect
+if it is in ``XLA_FLAGS`` before the first jax import — so it is injected
+here, at the top of conftest, unless the environment already forces a
+count of its own.
 """
 
 import importlib.util
 import os
 import sys
 
-import jax
-import pytest
+_FORCE_DEVICES = "--xla_force_host_platform_device_count"
+if _FORCE_DEVICES not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{_FORCE_DEVICES}=8 " + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
+import jax  # noqa: E402  (XLA_FLAGS must be set first)
+import pytest  # noqa: E402
 
 if importlib.util.find_spec("hypothesis") is None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))

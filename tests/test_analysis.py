@@ -120,11 +120,14 @@ def test_find_host_callbacks():
 
 def test_registry_shape(svc):
     reg = build_registry(svc, buckets=((1, 8), (8, 8)))
-    # per bucket: 3 kinds x 3 backends + tfidf/xla
-    assert len(reg) == 2 * (3 * 3 + 1)
+    # per bucket: 4 kinds x 3 backends (tfidf gained its kernel and
+    # over-budget contracts alongside the sharded registry work)
+    assert len(reg) == 2 * (4 * 3)
     keys = {c.key for c in reg}
     assert "plan/B8xm8/kernel" in keys
     assert "tfidf/B8xm8/xla" in keys
+    assert "tfidf/B8xm8/kernel" in keys
+    assert "tfidf/B8xm8/kernel_overbudget" in keys
     levels = int(svc.csa.wm.words.shape[0])
     plan = next(c for c in reg if c.key == "plan/B8xm8/kernel")
     assert plan.max_gathers == pair_descent_gather_ceiling(levels)
