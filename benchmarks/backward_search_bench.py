@@ -43,7 +43,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_collections, emit, time_batched, write_json
+from benchmarks.common import (
+    SCALE, bench_collections, emit, time_batched, write_json,
+)
 from repro.core.csa import build_csa, csa_search_batch, csa_search_planned
 from repro.core.sada import build_sada
 from repro.core.suffix import build_suffix_data, subcollection
@@ -189,6 +191,7 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
                         "variant": variant,
                         "batch": B,
                         "mesh_shape": mesh_shape,
+                        "scale": SCALE,
                         "median_ms": round(ms, 4),
                         "pallas_launches_per_batch": launches,
                         "gather_eqns": gathers,

@@ -3,9 +3,17 @@
 Indexes (Section 6.2.1): Brute-L, Brute-D, Sada-C-D, Sada-I-D (ILCP),
 Sada-I-L, PDL.  Query time excludes range finding, as in the paper; space
 is the modeled compressed size of the *listing structure* (the CSA is
-reported separately by collection_stats)."""
+reported separately by collection_stats).
+
+``--list-kernel`` adds fused-ILCP comparison rows: the same Fig-1
+recursion through ``ilcp_list_docs_da_planned`` as one Pallas launch
+(``on``), as the XLA lockstep fallback (``off``), or both (``auto``,
+the default) — each row carries its whole-program ``pallas_call`` count
+and the kernel's per-launch resident + scratch VMEM bytes."""
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -13,16 +21,24 @@ import jax.numpy as jnp
 from benchmarks.common import (
     bench_collections, emit, patterns_for, suffix_data_for, time_batched,
 )
+from repro.analysis.jaxpr import count_primitive
 from repro.core.csa import build_csa
-from repro.core.ilcp import build_ilcp, ilcp_list_docs_csa, ilcp_list_docs_da
+from repro.core.ilcp import (
+    build_ilcp,
+    ilcp_list_docs_csa,
+    ilcp_list_docs_da,
+    ilcp_list_docs_da_planned,
+)
 from repro.core.listing import brute_list_csa, brute_list_da, sada_c_list_docs_da
 from repro.core.pdl import build_pdl, pdl_list_docs
 from repro.core.wtlist import build_da_wavelet, wt_list_docs, wt_modeled_bits
+from repro.kernels import ops
 from repro.succinct.rmq import rmq_build
 from repro.common import ceil_log2
 
 
-def run(collections=("dna-p001", "dna-p03", "version-p001", "random")):
+def run(collections=("dna-p001", "dna-p03", "version-p001", "random"),
+        list_kernel: str = "auto"):
     rows = []
     for name in collections:
         coll = bench_collections()[name]
@@ -83,11 +99,51 @@ def run(collections=("dna-p001", "dna-p03", "version-p001", "random")):
             us_per_doc = t * 1e6 / max(total_df, 1)
             rows.append(
                 [name, ename, len(ranges), round(bits / n, 3),
-                 round(t * 1e3, 2), round(us_per_doc, 2)]
+                 round(t * 1e3, 2), round(us_per_doc, 2), 0, 0, 0]
+            )
+
+        # fused-ILCP comparison rows: one Pallas launch for the whole
+        # batch (on) vs the XLA lockstep fallback (off), same bit pattern
+        ilcp_bits = da_bits + ilcp.modeled_bits_listing()
+        modes = {"auto": (False, True), "on": (True,), "off": (False,)}
+        resident = ops.ilcp_list_resident_bytes(
+            ilcp.vilcp, ilcp.rmq.table, ilcp.run_starts, da
+        )
+        scratch = ops.ilcp_list_scratch_bytes(
+            int(lo.shape[0]), d=coll.d, max_df=max_df
+        )
+        for use_k in modes[list_kernel]:
+            fn = jax.jit(
+                lambda a, b, ilcp=ilcp, da=da, md=max_df, uk=use_k:
+                ilcp_list_docs_da_planned(ilcp, da, a, b, md, use_kernel=uk)
+            )
+            launches = count_primitive(
+                jax.make_jaxpr(fn)(lo, hi).jaxpr, "pallas_call"
+            )
+            t, out = time_batched(fn, lo, hi)
+            us_per_doc = t * 1e6 / max(total_df, 1)
+            label = f"Sada-I-D-fused[{'on' if use_k else 'off'}]"
+            rows.append(
+                [name, label, len(ranges), round(ilcp_bits / n, 3),
+                 round(t * 1e3, 2), round(us_per_doc, 2), launches,
+                 resident if use_k else 0, scratch if use_k else 0]
             )
     return emit(rows, ["collection", "index", "queries", "bits_per_char",
-                       "batch_ms", "us_per_result"])
+                       "batch_ms", "us_per_result", "pallas_calls",
+                       "resident_bytes", "scratch_bytes"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="fused-ILCP comparison rows: 'auto' benches both "
+                         "backends, 'on'/'off' just one")
+    ap.add_argument("--collections", nargs="*",
+                    default=["dna-p001", "dna-p03", "version-p001", "random"])
+    args = ap.parse_args()
+    run(collections=tuple(args.collections), list_kernel=args.list_kernel)
 
 
 if __name__ == "__main__":
-    run()
+    main()

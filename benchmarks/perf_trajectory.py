@@ -1,0 +1,139 @@
+"""Perf-trajectory gate: fresh bench JSON vs the committed mirror.
+
+The repo root keeps the latest bench artifacts (``BENCH_serve.json``,
+``BENCH_backward_search.json``) committed next to ROADMAP.md.  This module
+diffs a freshly generated ``experiments/BENCH_*.json`` against that
+committed baseline and FAILS when any matching row regresses its latency
+metric by more than ``--threshold`` (default 25%) — so a PR that silently
+doubles an endpoint's p50 turns CI red even though every correctness test
+still passes.
+
+Matching is strict: a fresh row is compared only to a baseline row with
+the same (collection, endpoint-or-variant, batch, mesh_shape, scale,
+list_kernel) key.  ``scale`` keeps rows produced under different
+``REPRO_BENCH_SCALE`` CI steps from being compared to each other;
+``list_kernel`` (defaulting "off" for rows that predate the fused listing
+kernel) keeps the kernel-vs-XLA comparison rows separate.  Rows whose
+baseline is below ``--min-ms`` are skipped — a 25% swing on a 20-microsecond
+row is scheduler noise, not a regression.  Zero matching rows is a loud
+warning, not a failure: the first run after a row-schema change has
+nothing to diff against until the mirror is refreshed.
+
+    PYTHONPATH=src python -m benchmarks.perf_trajectory \
+        --fresh experiments/BENCH_serve_sharded.json \
+        --baseline /tmp/committed_BENCH_serve.json \
+        [--threshold 0.25] [--min-ms 0.05]
+
+In CI the baseline must come from ``git show HEAD:BENCH_serve.json`` — the
+bench steps earlier in the job overwrite the repo-root mirrors in the
+working tree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: latency fields tried in order — serve rows carry p50_ms, the
+#: backward-search roofline rows carry median_ms
+METRICS = ("p50_ms", "median_ms")
+
+
+def _row_key(row: dict):
+    return (
+        row.get("collection"),
+        row.get("endpoint") or row.get("variant"),
+        row.get("batch"),
+        tuple(row.get("mesh_shape") or ()),
+        row.get("scale"),
+        row.get("list_kernel", "off"),
+    )
+
+
+def _metric(row: dict):
+    for name in METRICS:
+        if name in row:
+            return name, float(row[name])
+    return None, None
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    out = {}
+    for row in payload.get("results", []):
+        name, value = _metric(row)
+        if name is None:
+            continue
+        out[_row_key(row)] = (name, value)
+    return out
+
+
+def compare(fresh: dict, baseline: dict, threshold: float,
+            min_ms: float) -> tuple[list, list]:
+    """Returns (regressions, compared): regressions as printable dicts,
+    compared as the matched keys — empty ``compared`` means the schemas
+    diverged and the gate has nothing to say."""
+    regressions, compared = [], []
+    for key, (name, fresh_ms) in fresh.items():
+        if key not in baseline:
+            continue
+        base_name, base_ms = baseline[key]
+        if base_name != name or base_ms < min_ms:
+            continue
+        compared.append(key)
+        if fresh_ms > base_ms * (1.0 + threshold):
+            regressions.append({
+                "key": key,
+                "metric": name,
+                "baseline_ms": base_ms,
+                "fresh_ms": fresh_ms,
+                "ratio": round(fresh_ms / base_ms, 3),
+            })
+    return regressions, compared
+
+
+def run(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.perf_trajectory",
+        description="fail CI when a bench row regresses vs the committed "
+                    "mirror",
+    )
+    ap.add_argument("--fresh", required=True,
+                    help="freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed mirror (use `git show HEAD:...` in CI "
+                         "— the bench steps overwrite the working tree)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional p50 regression (default 0.25)")
+    ap.add_argument("--min-ms", type=float, default=0.05,
+                    help="skip rows whose baseline is below this (noise "
+                         "floor, default 0.05 ms)")
+    args = ap.parse_args(argv)
+
+    fresh = _rows(args.fresh)
+    baseline = _rows(args.baseline)
+    regressions, compared = compare(fresh, baseline, args.threshold,
+                                    args.min_ms)
+
+    if not compared:
+        print(f"perf_trajectory: WARNING — no comparable rows between "
+              f"{args.fresh} ({len(fresh)} rows) and {args.baseline} "
+              f"({len(baseline)} rows); refresh the committed mirror",
+              file=sys.stderr)
+        return 0
+    for r in regressions:
+        coll, ep, batch, mesh, scale, lk = r["key"]
+        print(f"REGRESSION {coll}/{ep} B={batch} mesh={list(mesh)} "
+              f"scale={scale} list_kernel={lk}: {r['metric']} "
+              f"{r['baseline_ms']:.3f} -> {r['fresh_ms']:.3f} ms "
+              f"({r['ratio']}x)", file=sys.stderr)
+    print(f"perf_trajectory: {len(compared)} rows compared, "
+          f"{len(regressions)} regression(s) past "
+          f"{args.threshold:.0%} (noise floor {args.min_ms} ms)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(run())

@@ -42,8 +42,10 @@ import time
 import numpy as np
 import jax
 
-from benchmarks.common import bench_collections, emit, write_json
+from benchmarks.common import SCALE, bench_collections, emit, write_json
+from repro.analysis.jaxpr import count_primitive
 from repro.data.collections import random_substring_patterns
+from repro.kernels import ops
 from repro.serve import faults
 from repro.serve.retrieval import RetrievalService
 from repro.serve.runtime import RuntimeConfig, ServeRuntime
@@ -53,6 +55,10 @@ SHARD_COUNTS = (1, 2, 4, 8)
 ITERS = 20
 RESILIENCE_QUERIES = 512
 DEFAULT_INJECT = "executor_fail,slow_pdl,compile_error"
+#: fixed batch sizes for the kernel-vs-XLA listing comparison — NOT scaled
+#: down in smoke runs, so the committed mirror's comparison rows stay
+#: directly diffable across CI configurations
+LIST_COMPARE_BATCHES = (16, 128)
 
 
 def _build_service(coll, n_shards: int, **kw):
@@ -202,6 +208,10 @@ def _bench_endpoints(svc, name, mesh_shape, workload, batch_sizes,
                     "endpoint": ep,
                     "batch": B,
                     "mesh_shape": mesh_shape,
+                    "scale": SCALE,
+                    "list_kernel":
+                        "on" if getattr(svc, "use_list_kernel", False)
+                        else "off",
                     "p50_ms": round(p50, 3),
                     "p99_ms": round(p99, 3),
                     "qps": round(qps, 1),
@@ -210,15 +220,82 @@ def _bench_endpoints(svc, name, mesh_shape, workload, batch_sizes,
             )
 
 
+def run_list_kernel_comparison(collection: str, max_df: int = 128,
+                               max_buf: int = 1024, iters: int = ITERS,
+                               batches=LIST_COMPARE_BATCHES) -> tuple:
+    """Kernel-vs-XLA listing rows at fixed batch sizes.
+
+    The auto planner routes most patterns to Brute/PDL, so the default
+    ``list`` rows barely exercise the ILCP executor — the honest kernel
+    measurement also forces the ILCP engine (endpoint label
+    ``list_ilcp``).  Every row carries the whole-program launch count and
+    the per-launch resident + scratch VMEM bytes, so the artifact records
+    the kernel's cost model next to its wall clock."""
+    coll = bench_collections()[collection]
+    workload = random_substring_patterns(coll, 1500, 6, 256)
+    rows, results = [], []
+    if not workload:
+        return rows, results
+    rng = np.random.default_rng(0)
+    for mode, use_k in (("off", False), ("on", True)):
+        svc = RetrievalService.build(
+            coll, block_size=32, beta=8.0, use_list_kernel=use_k,
+        )
+        ilcp = svc.ilcp
+        resident = ops.ilcp_list_resident_bytes(
+            ilcp.vilcp, ilcp.rmq.table, ilcp.run_starts, svc.da
+        )
+        for B in batches:
+            launches = count_primitive(
+                svc.trace_endpoint("list", B=B, max_df=max_df).jaxpr,
+                "pallas_call",
+            )
+            scratch = ops.ilcp_list_scratch_bytes(B, d=ilcp.d, max_df=max_df)
+            idx = rng.integers(0, len(workload), size=(iters + 1, B))
+            batches_q = [[workload[i] for i in row] for row in idx]
+            it = iter(range(10_000))
+
+            def batch(batches_q=batches_q, it=it):
+                return batches_q[next(it) % len(batches_q)]
+
+            for ep, eng in (("list", "auto"), ("list_ilcp", "ilcp")):
+                p50, p99, mean = _timed(
+                    lambda: svc.list_docs(batch(), max_df=max_df,
+                                          engine=eng, max_buf=max_buf),
+                    iters=iters, warmup=iters + 1,
+                )
+                qps = B / (mean / 1e3)
+                rows.append([collection, ep, B, mode, launches,
+                             round(p50, 2), round(p99, 2), round(qps, 0)])
+                results.append({
+                    "collection": collection,
+                    "endpoint": ep,
+                    "batch": B,
+                    "mesh_shape": [1],
+                    "scale": SCALE,
+                    "list_kernel": mode,
+                    "p50_ms": round(p50, 3),
+                    "p99_ms": round(p99, 3),
+                    "qps": round(qps, 1),
+                    "list_launches": launches,
+                    "list_resident_bytes": resident,
+                    "list_scratch_bytes": scratch,
+                })
+    emit(rows, ["collection", "endpoint", "batch", "list_kernel",
+                "launches", "p50_ms", "p99_ms", "qps"])
+    return rows, results
+
+
 def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         k: int = 10, max_df: int = 128, max_buf: int = 1024,
         out: str | None = None, iters: int = ITERS,
         inject: str = DEFAULT_INJECT, resilience_queries: int = RESILIENCE_QUERIES,
-        shard_counts=SHARD_COUNTS):
+        shard_counts=SHARD_COUNTS, use_list_kernel: bool | None = None):
     rows, results = [], []
     for name in collections:
         coll = bench_collections()[name]
-        svc = RetrievalService.build(coll, block_size=32, beta=8.0)
+        svc = RetrievalService.build(coll, block_size=32, beta=8.0,
+                                     use_list_kernel=use_list_kernel)
         workload = random_substring_patterns(coll, 1500, 6, 256)
         if not workload:
             continue
@@ -239,12 +316,20 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
     for n_shards in feasible:
         svc, mesh_shape = _build_service(
             sweep_coll, n_shards, block_size=32, beta=8.0, brute_window=512,
+            use_list_kernel=use_list_kernel,
         )
         _bench_endpoints(svc, collections[0], mesh_shape, sweep_load,
                          batch_sizes, k, max_df, max_buf, iters, rows, results)
 
     emit(rows, ["collection", "endpoint", "batch", "shards",
                 "p50_ms", "p99_ms", "qps"])
+    # kernel-vs-XLA listing comparison at fixed batches (see the function's
+    # docstring); its rows join the artifact so the perf trajectory can
+    # diff the kernel path against the committed mirror
+    _, cmp_results = run_list_kernel_comparison(
+        collections[0], max_df=max_df, max_buf=max_buf, iters=iters,
+    )
+    results.extend(cmp_results)
     # resilience: unsharded, plus through the widest sharded service built
     resilience = run_resilience(collection=collections[0], inject=inject,
                                 n_queries=resilience_queries)
@@ -259,6 +344,8 @@ def run(collections=("version-p001", "dna-p03"), batch_sizes=BATCH_SIZES,
         "resilience": resilience,
         "resilience_sharded": resilience_sharded,
         "device_count": jax.device_count(),
+        "scale": SCALE,
+        "list_kernel_batches": list(LIST_COMPARE_BATCHES),
         "failures": [],
     }
     write_json(out, payload, "BENCH_serve.json")
@@ -275,16 +362,23 @@ def main():
     ap.add_argument("--inject", default=DEFAULT_INJECT,
                     help="fault specs for the resilience section "
                          "(repro.serve.faults names, 'name[:rate]' comma list)")
+    ap.add_argument("--list-kernel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="listing backend for the main endpoint rows: "
+                         "'auto' follows the platform (kernel on TPU), "
+                         "'on'/'off' force it; the kernel-vs-XLA comparison "
+                         "block always benches both")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one collection, tiny batches, 3 iters")
     args = ap.parse_args()
+    lk = {"auto": None, "on": True, "off": False}[args.list_kernel]
     if args.smoke:
         run(collections=("version-p001",), batch_sizes=(1, 16), iters=3,
             out=args.out, inject=args.inject, resilience_queries=128,
-            shard_counts=tuple(args.shards))
+            shard_counts=tuple(args.shards), use_list_kernel=lk)
     else:
         run(batch_sizes=tuple(args.batches), out=args.out, inject=args.inject,
-            shard_counts=tuple(args.shards))
+            shard_counts=tuple(args.shards), use_list_kernel=lk)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@ else:
 * **launch count** — the fused backward-search path lowers to exactly ONE
   ``pallas_call`` per batch; the XLA pair-descent fallback lowers to ZERO.
   A second launch (or a lost one) is a silent 2x regression that no
-  correctness test notices.
+  correctness test notices.  The ``list`` endpoint's kernel path adds the
+  fused ILCP listing launch on top of the search launch: exactly TWO
+  per program (``2 * S`` sharded — each shard launches its own pair),
+  and still ZERO on the XLA / over-budget fallback.
 * **gather ceiling** — the pair-descent range search issues a bounded
   number of static gather eqns (2 per wavelet level inside the symbol
   scan, plus table lookups); an executor rewrite that reintroduces the
@@ -94,13 +97,22 @@ def build_registry(svc, buckets=((1, 8), (8, 8))) -> list[EndpointContract]:
     levels = int(svc.csa.wm.words.shape[0])
     ceiling = pair_descent_gather_ceiling(levels)
     budget = ops.BACKWARD_SEARCH_VMEM_BUDGET
+    # the list endpoint carries two different kernels (search + listing);
+    # each pallas_call is audited against the looser of the two budgets —
+    # the wrappers enforce the per-kernel number, the audit proves neither
+    # launch escaped its fallback by more than the whole budget class
+    list_budget = max(budget, ops.ILCP_LIST_VMEM_BUDGET)
     contracts = []
     for bucket in buckets:
         for kind in ("plan", "list", "topk"):
             gath = ceiling if kind == "plan" else None
+            # kernel path: one fused backward-search launch, plus — for
+            # list only — the fused ILCP listing launch (PR 6)
+            launches = 2 if kind == "list" else 1
             contracts.append(EndpointContract(
-                kind, bucket, "kernel", pallas_calls=1, max_gathers=gath,
-                vmem_budget=budget,
+                kind, bucket, "kernel", pallas_calls=launches,
+                max_gathers=gath,
+                vmem_budget=list_budget if kind == "list" else budget,
             ))
             contracts.append(EndpointContract(
                 kind, bucket, "xla", pallas_calls=0, max_gathers=gath,
@@ -133,15 +145,19 @@ def build_sharded_registry(svc, buckets=((1, 8), (8, 8))) -> list[EndpointContra
     # per-shard pair descents are unrolled: S times the single-index ceiling
     ceiling = S * pair_descent_gather_ceiling(levels)
     budget = ops.BACKWARD_SEARCH_VMEM_BUDGET
+    list_budget = max(budget, ops.ILCP_LIST_VMEM_BUDGET)
     allowed = ("psum", "all_gather")
     contracts = []
     for bucket in buckets:
         for kind in ("plan", "list", "topk", "tfidf"):
             gath = ceiling if kind == "plan" else None
+            # list launches search + listing kernels per shard: 2 * S
+            launches = 2 * S if kind == "list" else S
             contracts.append(EndpointContract(
-                kind, bucket, "kernel", pallas_calls=S, max_gathers=gath,
-                vmem_budget=budget, collectives_allowed=allowed,
-                mesh_axis="docs",
+                kind, bucket, "kernel", pallas_calls=launches,
+                max_gathers=gath,
+                vmem_budget=list_budget if kind == "list" else budget,
+                collectives_allowed=allowed, mesh_axis="docs",
             ))
             contracts.append(EndpointContract(
                 kind, bucket, "xla", pallas_calls=0, max_gathers=gath,
@@ -215,18 +231,27 @@ def audit_jaxpr(traced, contract: EndpointContract) -> list[Violation]:
 
 def trace_for_contract(svc, contract: EndpointContract):
     """Trace the endpoint program a contract describes, with the backend
-    forced and — for ``kernel_overbudget`` — the VMEM budget clamped so an
-    over-budget index is simulated at lowering time."""
+    forced and — for ``kernel_overbudget`` — BOTH VMEM budgets clamped so
+    an over-budget index is simulated at lowering time (the list endpoint
+    carries two kernels, and proving the fallback means proving both
+    wrappers routed to XLA, not just the search one)."""
     B, m = contract.bucket
     use_kernel = contract.backend != "xla"
+    kw = {"use_kernel": use_kernel}
+    if contract.kind == "list":
+        kw["use_list_kernel"] = use_kernel
     if contract.backend == "kernel_overbudget":
-        saved = ops.BACKWARD_SEARCH_VMEM_BUDGET
+        saved = (ops.BACKWARD_SEARCH_VMEM_BUDGET, ops.ILCP_LIST_VMEM_BUDGET)
         ops.BACKWARD_SEARCH_VMEM_BUDGET = 1
+        ops.ILCP_LIST_VMEM_BUDGET = 1
         try:
-            return svc.trace_endpoint(contract.kind, B, m, use_kernel=True)
+            kw["use_kernel"] = True
+            if contract.kind == "list":
+                kw["use_list_kernel"] = True
+            return svc.trace_endpoint(contract.kind, B, m, **kw)
         finally:
-            ops.BACKWARD_SEARCH_VMEM_BUDGET = saved
-    return svc.trace_endpoint(contract.kind, B, m, use_kernel=use_kernel)
+            ops.BACKWARD_SEARCH_VMEM_BUDGET, ops.ILCP_LIST_VMEM_BUDGET = saved
+    return svc.trace_endpoint(contract.kind, B, m, **kw)
 
 
 def _csa_static_vmem_bytes(csa, buckets) -> int:
@@ -237,6 +262,19 @@ def _csa_static_vmem_bytes(csa, buckets) -> int:
     return ops.block_meta_bytes(ops.backward_search_block_meta(
         wm.words, wm.ones_prefix, wm.zcount, base,
         batch=max(b for b, _ in buckets), max_m=max(m for _, m in buckets),
+    ))
+
+
+def _list_static_vmem_bytes(svc, buckets, max_df: int = 64) -> int:
+    """Static VMEM estimate for the fused ILCP listing kernel on this
+    index: resident tables + query tiles + scratch (interval stacks and
+    the distinct-document bitmap), exactly the layout
+    ``ops.ilcp_list_block_meta`` describes and the wrapper gates on.
+    ``max_df`` matches the audit default of ``endpoint_program``."""
+    ilcp = svc.ilcp
+    return ops.block_meta_bytes(ops.ilcp_list_block_meta(
+        ilcp.vilcp, ilcp.rmq.table, ilcp.run_starts, svc.da,
+        batch=max(b for b, _ in buckets), d=ilcp.d, max_df=max_df,
     ))
 
 
@@ -280,12 +318,23 @@ def audit_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Violation]]
             f"the {ops.BACKWARD_SEARCH_VMEM_BUDGET}-byte budget — kernel "
             f"launches on this index would be routed to XLA",
         ))
+    list_bytes = _list_static_vmem_bytes(svc, buckets)
+    if list_bytes > ops.ILCP_LIST_VMEM_BUDGET:
+        violations.append(Violation(
+            "index/static-list", "vmem",
+            f"listing block metadata (resident + tiles + scratch) claims "
+            f"~{list_bytes} bytes of VMEM, over the "
+            f"{ops.ILCP_LIST_VMEM_BUDGET}-byte budget — listing kernel "
+            f"launches on this index would be routed to XLA",
+        ))
     audited, vs = _audit_contracts(svc, registry)
     violations.extend(vs)
     report = {
         "contracts_audited": len(registry),
         "vmem_budget_bytes": ops.BACKWARD_SEARCH_VMEM_BUDGET,
+        "list_vmem_budget_bytes": ops.ILCP_LIST_VMEM_BUDGET,
         "index_static_vmem_bytes": meta_bytes,
+        "list_static_vmem_bytes": list_bytes,
         "endpoints": audited,
         "violations": [v.as_dict() for v in violations],
     }
@@ -313,6 +362,18 @@ def audit_sharded_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Vio
                 f"budget — this shard's kernel launches would fall back to "
                 f"XLA; use more shards",
             ))
+    shard_list_meta = [
+        _list_static_vmem_bytes(sh, buckets) for sh in svc.shards
+    ]
+    for s, meta_bytes in enumerate(shard_list_meta):
+        if meta_bytes > ops.ILCP_LIST_VMEM_BUDGET:
+            violations.append(Violation(
+                f"docs:shard{s}/static-list", "vmem",
+                f"shard {s} listing block metadata claims ~{meta_bytes} "
+                f"bytes of VMEM, over the {ops.ILCP_LIST_VMEM_BUDGET}-byte "
+                f"budget — this shard's listing launches would fall back "
+                f"to XLA; use more shards",
+            ))
     audited, vs = _audit_contracts(svc, registry)
     violations.extend(vs)
     report = {
@@ -320,7 +381,9 @@ def audit_sharded_service(svc, buckets=((1, 8), (8, 8))) -> tuple[dict, list[Vio
         "n_shards": svc.n_shards,
         "contracts_audited": len(registry),
         "vmem_budget_bytes": ops.BACKWARD_SEARCH_VMEM_BUDGET,
+        "list_vmem_budget_bytes": ops.ILCP_LIST_VMEM_BUDGET,
         "shard_static_vmem_bytes": shard_meta,
+        "shard_list_static_vmem_bytes": shard_list_meta,
         "endpoints": audited,
         "violations": [v.as_dict() for v in violations],
     }

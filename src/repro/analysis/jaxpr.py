@@ -147,15 +147,39 @@ def pallas_eqns(jaxpr) -> list:
     return find_primitives(jaxpr, ("pallas_call",))
 
 
+def pallas_scratch_bytes(eqn) -> int:
+    """Bytes of every ``scratch_shapes`` operand of one ``pallas_call``
+    eqn.  ``grid_mapping.block_mappings`` covers only in/out operands, so
+    scratch is invisible to a block-shape walk — but the kernel jaxpr's
+    invars carry the scratch refs as its trailing parameters, and their
+    MemRef avals keep the allocated shape/dtype.  ``num_scratch_operands``
+    on the grid mapping says how many of the tail to take."""
+    gm = eqn.params.get("grid_mapping")
+    kernel = eqn.params.get("jaxpr")
+    n_scratch = getattr(gm, "num_scratch_operands", 0) if gm else 0
+    if not n_scratch or kernel is None:
+        return 0
+    total = 0
+    for var in _as_jaxpr(kernel).invars[-n_scratch:]:
+        aval = var.aval
+        total += (
+            int(math.prod(aval.shape)) * np.dtype(aval.dtype).itemsize
+        )
+    return total
+
+
 def pallas_block_bytes(eqn) -> int:
     """Static VMEM estimate for one ``pallas_call`` eqn: the bytes of every
     operand/result *block* (the per-grid-step resident set), read from the
-    eqn's ``grid_mapping`` block shapes.
+    eqn's ``grid_mapping`` block shapes, PLUS the kernel's scratch
+    allocations (``pallas_scratch_bytes`` — the fused listing kernel's
+    interval stacks and distinct-document bitmap live there, and leaving
+    them out would undercount its grid step by the whole working set).
 
-    This is the lowering-time counterpart of the runtime budget check in
-    ``repro.kernels.ops``: if this estimate exceeds
-    ``BACKWARD_SEARCH_VMEM_BUDGET`` the kernel was launched on an index the
-    wrapper should have routed to the XLA fallback."""
+    This is the lowering-time counterpart of the runtime budget checks in
+    ``repro.kernels.ops``: if this estimate exceeds the relevant budget the
+    kernel was launched on an index the wrapper should have routed to the
+    XLA fallback."""
     gm = eqn.params.get("grid_mapping")
     if gm is None:
         return 0
@@ -165,4 +189,4 @@ def pallas_block_bytes(eqn) -> int:
         sds = getattr(bm, "array_shape_dtype", None)
         itemsize = np.dtype(sds.dtype).itemsize if sds is not None else 4
         total += int(math.prod(shape)) * itemsize
-    return total
+    return total + pallas_scratch_bytes(eqn)

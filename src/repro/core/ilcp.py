@@ -225,14 +225,64 @@ def ilcp_list_docs_csa(index: ILCPIndex, csa: CSA, lo, hi, max_df: int):
     return ilcp_list_docs(index, lambda k: csa_da_at(csa, k), lo, hi, max_df)
 
 
-def ilcp_list_docs_da_batch(index: ILCPIndex, da: jnp.ndarray, lo, hi, max_df: int):
+def ilcp_list_docs_da_batch(index: ILCPIndex, da: jnp.ndarray, lo, hi, max_df: int,
+                            *, use_rmq_kernel: bool = False):
     """Sada-I-D over a range batch (masked-query contract of
     repro.core.listing): returns (docs int32[B, max_df] padded -1, count[B]).
     Document ids are reported in *discovery* order — callers needing the
-    canonical sorted layout sort rows (repro.serve.retrieval does)."""
-    return jax.vmap(lambda a, b: ilcp_list_docs_da(index, da, a, b, max_df))(
-        as_i32(lo), as_i32(hi)
+    canonical sorted layout sort rows (repro.serve.retrieval does).
+
+    ``use_rmq_kernel=True`` swaps the vmap'd per-query recursion for the
+    batch-lockstep oracle with the popped-interval RMQ routed through the
+    batched Pallas RMQ kernel (``repro.kernels.ops.rmq``) — one launch per
+    lockstep round instead of an XLA gather chain per query.  Answers are
+    bit-identical either way; the default keeps the serve XLA path at zero
+    ``pallas_call``s."""
+    lo = as_i32(lo)
+    hi = as_i32(hi)
+    if not use_rmq_kernel:
+        return jax.vmap(lambda a, b: ilcp_list_docs_da(index, da, a, b, max_df))(
+            lo, hi
+        )
+
+    from repro.kernels import ops, ref
+
+    def rmq_fn(a, b):
+        return ops.rmq(index.vilcp, index.rmq.table, a, b)
+
+    return ref.ilcp_list_ref(
+        index.vilcp, index.rmq.table, index.run_starts, da, lo, hi,
+        ops.runs_of(index.run_starts, lo),
+        ops.runs_of(index.run_starts, hi - 1),
+        d=index.d, max_df=max_df, rmq_fn=rmq_fn,
     )
+
+
+def ilcp_list_docs_da_planned(index: ILCPIndex, da: jnp.ndarray, lo, hi,
+                              max_df: int, *, use_kernel: bool | None = None,
+                              block_q: int = 128, interpret: bool | None = None):
+    """Sada-I-D listing written batch-first for the serving executor.
+
+    Same integers as ``ilcp_list_docs_da_batch`` — documents in discovery
+    order, bit-identical across paths.
+
+    ``use_kernel`` selects the execution path:
+      * ``None``  — auto: the fused Pallas kernel on TPU, XLA elsewhere;
+      * ``True``  — force the fused kernel (``repro.kernels.ilcp_list``;
+        one ``pallas_call`` for the whole batched recursion, interpret mode
+        off-TPU unless ``interpret`` says otherwise);
+      * ``False`` — force the XLA vmap'd while_loop path.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.ops import ilcp_list
+
+        return ilcp_list(
+            index.vilcp, index.rmq.table, index.run_starts, da, lo, hi,
+            d=index.d, max_df=max_df, block_q=block_q, interpret=interpret,
+        )
+    return ilcp_list_docs_da_batch(index, da, lo, hi, max_df)
 
 
 def ilcp_list_docs_csa_batch(index: ILCPIndex, csa: CSA, lo, hi, max_df: int):

@@ -19,6 +19,7 @@ from repro.kernels import ref
 from repro.kernels.backward_search import backward_search_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ilcp_list import ilcp_list_pallas, stack_cap
 from repro.kernels.rank import rank_pallas
 from repro.kernels.rmq import rmq_pallas
 
@@ -26,6 +27,13 @@ from repro.kernels.rmq import rmq_pallas
 #: matrix; larger indexes take the XLA pair-descent path instead (sharding
 #: the index over cores is the ROADMAP's per-shard serving follow-up).
 BACKWARD_SEARCH_VMEM_BUDGET = 12 * 2**20
+
+#: per-core VMEM the fused listing kernel may claim — resident tables
+#: (flattened RMQ table + vilcp + run boundaries + document array) PLUS the
+#: per-tile scratch (interval stacks + bit-packed V); past it the executor
+#: takes the XLA while_loop path, and sharding restores the kernel exactly
+#: as it does for backward search (each shard's tables are ~1/S the size).
+ILCP_LIST_VMEM_BUDGET = 12 * 2**20
 
 
 def backward_search_resident_bytes(words, ones_prefix, zcount, base) -> int:
@@ -139,6 +147,99 @@ def backward_search(words, ones_prefix, zcount, base, patterns, lengths, *,
 def rmq(values, table, lo, hi, *, block_q=1024, interpret=None):
     return rmq_pallas(
         values, table, lo, hi, block_q=block_q,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+def ilcp_list_resident_bytes(vilcp, table, run_starts, da) -> int:
+    """VMEM the fused listing kernel keeps resident across the recursion:
+    the flattened RMQ table, the run head values, the run boundaries and
+    the document array (all int32).  Single source of truth for the budget
+    decision, like ``backward_search_resident_bytes``."""
+    return int(table.size + vilcp.size + run_starts.size + da.size) * 4
+
+
+def ilcp_list_scratch_bytes(batch: int, *, d: int, max_df: int,
+                            block_q: int = 128) -> int:
+    """VMEM scratch one grid step of the listing kernel allocates: two
+    int32 interval stacks of ``stack_cap(max_df)`` entries per query plus
+    the bit-packed distinct-document marker (ceil(d/32) uint32 words)."""
+    bq = min(block_q, max(batch, 1))
+    vw = -(-max(d, 1) // 32)
+    return (2 * bq * stack_cap(max_df) + bq * vw) * 4
+
+
+def ilcp_list_block_meta(vilcp, table, run_starts, da,
+                         batch: int, *, d: int, max_df: int,
+                         block_q: int = 128) -> list:
+    """Per-grid-step block layout of the fused listing kernel as
+    (shape, dtype) pairs, mirroring the BlockSpecs AND the
+    ``scratch_shapes`` in ``ilcp_list_pallas`` — the scratch entries are
+    what forced the analysis estimator to learn about scratch operands.
+    Summing via ``block_meta_bytes`` bounds one grid step's VMEM."""
+    levels, rho = table.shape
+    bq = min(block_q, max(batch, 1))
+    vw = -(-max(d, 1) // 32)
+    return [
+        ((bq,), "int32"),                  # lo tile
+        ((bq,), "int32"),                  # hi tile
+        ((bq,), "int32"),                  # lo_run tile
+        ((bq,), "int32"),                  # hi_run tile
+        ((levels * rho,), "int32"),        # flattened RMQ table (resident)
+        ((rho,), "int32"),                 # vilcp (resident)
+        (tuple(run_starts.shape), "int32"),  # run boundaries (resident)
+        (tuple(da.shape), "int32"),        # document array (resident)
+        ((bq, max_df), "int32"),           # docs out
+        ((bq,), "int32"),                  # cnt out
+        ((bq, stack_cap(max_df)), "int32"),  # scratch: stack a
+        ((bq, stack_cap(max_df)), "int32"),  # scratch: stack b
+        ((bq, vw), "uint32"),              # scratch: bit-packed V
+    ]
+
+
+def runs_of(run_starts, pos):
+    """Run index containing ILCP position ``pos`` (vectorised ``_run_of``:
+    rank1 over the run-start bitvector = searchsorted over the starts).
+    ``pos = -1`` (empty range roots) maps to run -1."""
+    starts = run_starts[: run_starts.shape[0] - 1]
+    return (
+        jnp.searchsorted(starts, jnp.asarray(pos, jnp.int32), side="right")
+        .astype(jnp.int32) - 1
+    )
+
+
+def ilcp_list(vilcp, table, run_starts, da, lo, hi, *,
+              d, max_df, block_q=128, interpret=None):
+    """Fused batched ILCP document listing (see repro.kernels.ilcp_list).
+
+    Takes SA ranges; the run indices of the range endpoints the kernel
+    wants are materialised here with one searchsorted per boundary — the
+    backward-search wrapper's pattern-reversal move.  Odd shapes (empty
+    batch, zero ``max_df``) and index stacks past the VMEM budget fall
+    back to the pure-jnp lockstep oracle — the framework never fails on
+    shape, it just takes the XLA path.
+    """
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    B = lo.shape[0]
+    if B == 0 or max_df <= 0 or d <= 0:
+        # degenerate shapes have a closed-form answer (no documents); the
+        # (B, 0) docs buffer can't even be scatter-indexed by the oracle
+        return (jnp.full((B, max(max_df, 0)), -1, jnp.int32),
+                jnp.zeros((B,), jnp.int32))
+    lo_run = runs_of(run_starts, lo)
+    hi_run = runs_of(run_starts, hi - 1)
+    vmem_bytes = block_meta_bytes(ilcp_list_block_meta(
+        vilcp, table, run_starts, da, B, d=d, max_df=max_df, block_q=block_q
+    ))
+    if vmem_bytes > ILCP_LIST_VMEM_BUDGET:
+        return ref.ilcp_list_ref(
+            vilcp, table, run_starts, da, lo, hi, lo_run, hi_run,
+            d=d, max_df=max_df,
+        )
+    return ilcp_list_pallas(
+        vilcp, table, run_starts, da, lo, hi, lo_run, hi_run,
+        d=d, max_df=max_df, block_q=block_q,
         interpret=_auto_interpret(interpret),
     )
 

@@ -101,6 +101,133 @@ def rmq_ref(values: jnp.ndarray, table: jnp.ndarray, lo: jnp.ndarray, hi: jnp.nd
     return jnp.where(pick_b, b, a).astype(jnp.int32)
 
 
+def ilcp_list_ref(
+    vilcp: jnp.ndarray,       # int32[rho] run head values (RMQ values)
+    table: jnp.ndarray,       # int32[levels, rho] sparse-table argmins
+    run_starts: jnp.ndarray,  # int32[rho + 1] run boundaries (last = n)
+    da: jnp.ndarray,          # int32[n] document array
+    lo: jnp.ndarray,          # int32[B] SA-range starts
+    hi: jnp.ndarray,          # int32[B] SA-range ends (exclusive)
+    lo_run: jnp.ndarray,      # int32[B] run of lo
+    hi_run: jnp.ndarray,      # int32[B] run of hi - 1
+    *,
+    d: int,
+    max_df: int,
+    rmq_fn=None,
+):
+    """Batched ILCP document listing over the Fig-1 recursion.
+
+    Same operand layout and the same integers as the fused Pallas kernel
+    (repro.kernels.ilcp_list): the per-query recursion is flattened into a
+    POP/SCAN state machine and the whole batch advances in lockstep through
+    one ``lax.while_loop``, replaying ``ilcp_list_docs`` trajectories
+    exactly — documents come out in discovery order, bit-identical to the
+    vmap'd while_loop path and to the kernel.
+
+    ``rmq_fn(a, b) -> leftmost argmin of vilcp[a..b]`` may be injected to
+    route the popped-interval RMQ through the batched Pallas RMQ kernel
+    (``repro.kernels.ops.rmq``); default is the inline two-gather chain.
+    """
+    from repro.kernels.ilcp_list import (
+        lockstep_iteration_cap, pop_cap, stack_cap,
+    )
+
+    levels, rho = table.shape
+    n = da.shape[0]
+    B = lo.shape[0]
+    cap = stack_cap(max_df)
+    iter_cap = pop_cap(max_df)
+    rows = jnp.arange(B, dtype=jnp.int32)
+    flat = table.reshape(-1)
+
+    if rmq_fn is None:
+        def rmq_fn(a, b):
+            span = jnp.maximum(b - a + 1, 1)
+            k = jnp.clip(31 - jax.lax.clz(span), 0, levels - 1)
+            right = jnp.maximum(b - (jnp.int32(1) << k) + 1, a)
+            ia = flat[k * rho + a]
+            ib = flat[k * rho + right]
+            va = vilcp[ia]
+            vb = vilcp[ib]
+            pick_b = (vb < va) | ((vb == va) & (ib < ia))
+            return jnp.where(pick_b, ib, ia)
+
+    zeros = jnp.zeros(B, jnp.int32)
+    init = (
+        jnp.int32(0),
+        jnp.zeros(B, jnp.bool_),                          # done
+        zeros, zeros, zeros, zeros, zeros, zeros,         # mode,a,b,i_run,k,j
+        jnp.ones(B, jnp.int32),                           # sp
+        zeros, zeros,                                     # cnt, pops
+        jnp.zeros((B, cap), jnp.int32).at[:, 0].set(lo_run),
+        jnp.zeros((B, cap), jnp.int32).at[:, 0].set(hi_run),
+        jnp.zeros((B, d), jnp.bool_),                     # V
+        jnp.full((B, max_df), -1, jnp.int32),             # docs
+    )
+
+    def cond(c):
+        it, done = c[0], c[1]
+        return jnp.any(~done) & (it < lockstep_iteration_cap(max_df))
+
+    def body(c):
+        (it, done, mode, a, b, i_run, k, j, sp, cnt, pops,
+         sa, sb, V, docs) = c
+
+        in_pop = ~done & (mode == 0)
+        can_pop = in_pop & (sp > 0) & (cnt < max_df) & (pops < iter_cap)
+        done = done | (in_pop & ~can_pop)
+
+        top = jnp.maximum(sp - 1, 0)
+        a = jnp.where(can_pop, sa[rows, top], a)
+        b = jnp.where(can_pop, sb[rows, top], b)
+        sp = jnp.where(can_pop, sp - 1, sp)
+        pops = jnp.where(can_pop, pops + 1, pops)
+
+        valid = can_pop & (a <= b) & (lo < hi)
+        r = rmq_fn(jnp.clip(a, 0, rho - 1), jnp.clip(b, 0, rho - 1))
+        i_run = jnp.where(valid, r, i_run)
+        k = jnp.where(
+            valid, jnp.maximum(lo, run_starts[jnp.clip(r, 0, rho - 1)]), k
+        )
+        j = jnp.where(
+            valid, jnp.minimum(hi, run_starts[jnp.clip(r + 1, 0, rho)]), j
+        )
+        mode = jnp.where(valid, 1, mode)
+
+        scanning = ~done & (mode == 1)
+        proc = scanning & (k < j) & (cnt < max_df)
+        g = da[jnp.clip(k, 0, n - 1)]
+        gc = jnp.clip(g, 0, max(d - 1, 0))
+        seen = V[rows, gc]
+        rep = proc & ~seen
+        V = V.at[rows, gc].set(jnp.where(proc, True, seen))
+        slot = jnp.minimum(cnt, max_df - 1)
+        docs = docs.at[rows, slot].set(jnp.where(rep, g, docs[rows, slot]))
+        cnt = jnp.where(rep, cnt + 1, cnt)
+        k = jnp.where(proc, k + 1, k)
+        aborted = proc & seen
+        ended = scanning & (aborted | (k >= j) | (cnt >= max_df))
+
+        push = ended & ~aborted
+        slot1 = jnp.minimum(sp, cap - 1)
+        do1 = push & (i_run + 1 <= b) & (sp < cap)
+        sa = sa.at[rows, slot1].set(jnp.where(do1, i_run + 1, sa[rows, slot1]))
+        sb = sb.at[rows, slot1].set(jnp.where(do1, b, sb[rows, slot1]))
+        sp = jnp.where(do1, sp + 1, sp)
+        slot2 = jnp.minimum(sp, cap - 1)
+        do2 = push & (a <= i_run - 1) & (sp < cap)
+        sa = sa.at[rows, slot2].set(jnp.where(do2, a, sa[rows, slot2]))
+        sb = sb.at[rows, slot2].set(jnp.where(do2, i_run - 1, sb[rows, slot2]))
+        sp = jnp.where(do2, sp + 1, sp)
+        mode = jnp.where(ended, 0, mode)
+
+        return (it + 1, done, mode, a, b, i_run, k, j, sp, cnt, pops,
+                sa, sb, V, docs)
+
+    final = jax.lax.while_loop(cond, body, init)
+    return final[14], final[9]
+
+
 def embedding_bag_ref(
     table: jnp.ndarray, indices: jnp.ndarray, offsets: jnp.ndarray, mode: str = "sum"
 ):

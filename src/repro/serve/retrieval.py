@@ -58,7 +58,7 @@ from repro.core.ilcp import (
     build_ilcp,
     ilcp_count_docs_batch,
     ilcp_list_docs_da,
-    ilcp_list_docs_da_batch,
+    ilcp_list_docs_da_planned,
 )
 from repro.core.listing import (
     brute_list_csa,
@@ -141,13 +141,16 @@ def _plan_program(use_kernel, csa, sada, patterns, lengths, threshold, forced):
 
 
 def _list_program(
-    max_df, brute_win, max_buf, use_kernel,
+    max_df, brute_win, max_buf, use_kernel, use_list_kernel,
     csa, ilcp, pdl, da, sada, patterns, lengths, threshold, forced,
 ):
     """list_docs as one program: plan, run all engines masked, select.
 
     ``brute_win`` is the Brute-L locate window — sized per compile bucket
     from planner occ stats (dispatch-aware), not the static ``max_buf``.
+    ``use_list_kernel`` selects the ILCP executor's backend: the fused
+    Pallas listing kernel (one launch — the program's second, after the
+    planner's backward search) or the XLA vmap'd while_loop.
     """
     plan = plan_queries(
         csa, sada, patterns, lengths, threshold, forced,
@@ -156,7 +159,9 @@ def _list_program(
     bl, bh = masked_ranges(plan, ENGINE_BRUTE)
     docs_b, cnt_b, _ = brute_list_csa_batch(csa, bl, bh, brute_win, max_df)
     il, ih = masked_ranges(plan, ENGINE_ILCP)
-    docs_i, cnt_i = ilcp_list_docs_da_batch(ilcp, da, il, ih, max_df)
+    docs_i, cnt_i = ilcp_list_docs_da_planned(
+        ilcp, da, il, ih, max_df, use_kernel=use_list_kernel
+    )
     pl, ph = masked_ranges(plan, ENGINE_PDL)
     docs_p, cnt_p = pdl_list_docs_batch(pdl, csa, pl, ph, max_df, max_buf)
 
@@ -226,6 +231,7 @@ class RetrievalService:
     da: object
     occ_df_threshold: float = 4.0     # paper: brute wins when occ/df < ~4
     use_search_kernel: bool = False   # fused Pallas backward search (TPU path)
+    use_list_kernel: bool = False     # fused Pallas ILCP listing (TPU path)
     brute_window: int | None = None   # None = size per bucket from occ stats
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
     _brute_windows: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -241,6 +247,7 @@ class RetrievalService:
         cls, coll: Collection, block_size: int = 64, beta: float = 16.0,
         sada_variant: str = "sparse", sample_rate: int = 16,
         use_search_kernel: bool | None = None,
+        use_list_kernel: bool | None = None,
         brute_window: int | None = None,
         validate: bool = True,
         mesh=None,
@@ -254,6 +261,7 @@ class RetrievalService:
                 coll, mesh, block_size=block_size, beta=beta,
                 sada_variant=sada_variant, sample_rate=sample_rate,
                 use_search_kernel=use_search_kernel,
+                use_list_kernel=use_list_kernel,
                 brute_window=brute_window, validate=validate,
             )
         data = build_suffix_data(coll)
@@ -261,6 +269,9 @@ class RetrievalService:
             # backend auto-detection: the fused backward-search kernel is
             # the default on TPU; elsewhere the XLA pair descent wins
             use_search_kernel = jax.default_backend() == "tpu"
+        if use_list_kernel is None:
+            # same auto-detection for the fused ILCP listing kernel
+            use_list_kernel = jax.default_backend() == "tpu"
         svc = cls(
             coll=coll,
             csa=build_csa(data, sample_rate=sample_rate),
@@ -270,6 +281,7 @@ class RetrievalService:
             sada=build_sada(data, sada_variant),
             da=jnp.asarray(data.da),
             use_search_kernel=use_search_kernel,
+            use_list_kernel=use_list_kernel,
             brute_window=brute_window,
         )
         if validate:
@@ -404,7 +416,8 @@ class RetrievalService:
         exe = self._compiled(
             "list", (pats.shape, max_df, win, max_buf),
             lambda: functools.partial(
-                _list_program, max_df, win, max_buf, self.use_search_kernel
+                _list_program, max_df, win, max_buf,
+                self.use_search_kernel, self.use_list_kernel,
             ),
             args,
         )
@@ -620,6 +633,7 @@ class RetrievalService:
     ENDPOINT_KINDS = ("plan", "list", "topk", "tfidf")
 
     def endpoint_program(self, kind: str, *, use_kernel: bool | None = None,
+                         use_list_kernel: bool | None = None,
                          max_df: int = 64, k: int = 10, max_buf: int = 512,
                          conjunctive: bool = False):
         """The exact fused program + example arguments the compile cache
@@ -629,9 +643,12 @@ class RetrievalService:
 
         Returns ``(fn, args_builder)`` where ``args_builder(B, m)`` makes
         the padded example arguments for a (batch-bucket, length-bucket)
-        signature.  ``use_kernel=None`` inherits the service's backend."""
+        signature.  ``use_kernel=None`` / ``use_list_kernel=None`` inherit
+        the service's backends (the latter only matters to ``list``)."""
         if use_kernel is None:
             use_kernel = self.use_search_kernel
+        if use_list_kernel is None:
+            use_list_kernel = self.use_list_kernel
         if kind == "plan":
             fn = functools.partial(_plan_program, use_kernel)
 
@@ -640,7 +657,7 @@ class RetrievalService:
         elif kind == "list":
             fn = functools.partial(
                 _list_program, max_df, min(BRUTE_WINDOW_FLOOR, max_buf),
-                max_buf, use_kernel,
+                max_buf, use_kernel, use_list_kernel,
             )
 
             def args(B, m):

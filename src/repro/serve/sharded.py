@@ -151,14 +151,19 @@ def _sharded_plan_program(
 
 
 def _sharded_list_program(
-    mesh, doc_bases, max_df, brute_win, max_buf, use_kernel,
+    mesh, doc_bases, max_df, brute_win, max_buf, use_kernel, use_list_kernel,
     shard_idx, patterns, lengths, threshold, forced,
 ):
-    """Listing: per-shard engines -> offset ids -> gather -> merge-sort."""
+    """Listing: per-shard engines -> offset ids -> gather -> merge-sort.
+
+    ``use_list_kernel`` rides through to each shard's ``_list_program``:
+    on the kernel path the fused ILCP listing kernel launches once PER
+    SHARD (like backward search), with a per-shard VMEM footprint —
+    restoring the listing kernel for stacks past ILCP_LIST_VMEM_BUDGET."""
     per_docs, per_cnt = [], []
     for s, (csa, ilcp, pdl, _pdlt, sada, da) in enumerate(shard_idx):
         docs, cnt, _plan = _list_program(
-            max_df, brute_win, max_buf, use_kernel,
+            max_df, brute_win, max_buf, use_kernel, use_list_kernel,
             csa, ilcp, pdl, da, sada, patterns, lengths, threshold, forced,
         )
         per_docs.append(jnp.where(docs >= 0, docs + doc_bases[s], -1))
@@ -307,6 +312,7 @@ class ShardedRetrievalService:
     doc_bases: np.ndarray             # int32[S] first global doc id per shard
     occ_df_threshold: float = 4.0
     use_search_kernel: bool = False
+    use_list_kernel: bool = False
     brute_window: int | None = None
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
     _brute_windows: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -320,6 +326,7 @@ class ShardedRetrievalService:
         cls, coll: Collection, mesh, block_size: int = 64, beta: float = 16.0,
         sada_variant: str = "sparse", sample_rate: int = 16,
         use_search_kernel: bool | None = None,
+        use_list_kernel: bool | None = None,
         brute_window: int | None = None,
         validate: bool = True,
     ):
@@ -327,6 +334,8 @@ class ShardedRetrievalService:
         bounds = doc_shard_bounds(coll.d, n_shards)
         if use_search_kernel is None:
             use_search_kernel = jax.default_backend() == "tpu"
+        if use_list_kernel is None:
+            use_list_kernel = jax.default_backend() == "tpu"
         shards = []
         for dlo, dhi in bounds:
             sub = subcollection(coll, dlo, dhi)
@@ -334,6 +343,7 @@ class ShardedRetrievalService:
                 sub, block_size=block_size, beta=beta,
                 sada_variant=sada_variant, sample_rate=sample_rate,
                 use_search_kernel=use_search_kernel,
+                use_list_kernel=use_list_kernel,
                 brute_window=brute_window, validate=False,
             )
             # jit rejects mixed single-device placements: leaves live
@@ -351,6 +361,7 @@ class ShardedRetrievalService:
             shards=shards,
             doc_bases=np.asarray([b[0] for b in bounds], np.int32),
             use_search_kernel=use_search_kernel,
+            use_list_kernel=use_list_kernel,
             brute_window=brute_window,
         )
         if validate:
@@ -469,6 +480,7 @@ class ShardedRetrievalService:
             lambda: functools.partial(
                 _sharded_list_program, self.mesh, tuple(self.doc_bases),
                 max_df, win, max_buf, self.use_search_kernel,
+                self.use_list_kernel,
             ),
             args,
         )
@@ -653,6 +665,7 @@ class ShardedRetrievalService:
     ENDPOINT_KINDS = ("plan", "list", "topk", "tfidf")
 
     def endpoint_program(self, kind: str, *, use_kernel: bool | None = None,
+                         use_list_kernel: bool | None = None,
                          max_df: int = 64, k: int = 10, max_buf: int = 512,
                          conjunctive: bool = False):
         """(fn, args_builder) of the sharded fused program for ``kind`` —
@@ -660,6 +673,8 @@ class ShardedRetrievalService:
         collective allowlist)."""
         if use_kernel is None:
             use_kernel = self.use_search_kernel
+        if use_list_kernel is None:
+            use_list_kernel = self.use_list_kernel
         bases = tuple(self.doc_bases)
         if kind == "plan":
             fn = functools.partial(
@@ -672,6 +687,7 @@ class ShardedRetrievalService:
             fn = functools.partial(
                 _sharded_list_program, self.mesh, bases, max_df,
                 min(BRUTE_WINDOW_FLOOR, max_buf), max_buf, use_kernel,
+                use_list_kernel,
             )
 
             def args(B, m):

@@ -139,7 +139,12 @@ def test_audit_service_clean(svc):
     assert report["contracts_audited"] == len(report["endpoints"])
     assert all(e["ok"] for e in report["endpoints"])
     kernel_rows = [e for e in report["endpoints"] if e["contract"].endswith("/kernel")]
-    assert kernel_rows and all(e["pallas_calls"] == 1 for e in kernel_rows)
+    # list programs fuse search + listing -> two launches; everything else one
+    assert kernel_rows and all(
+        e["pallas_calls"] == (2 if e["contract"].startswith("list/") else 1)
+        for e in kernel_rows
+    )
+    assert any(e["contract"].startswith("list/") for e in kernel_rows)
     over_rows = [
         e for e in report["endpoints"]
         if e["contract"].endswith("/kernel_overbudget")

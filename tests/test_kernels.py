@@ -63,6 +63,30 @@ def test_rmq_kernel(n, vrange):
         assert g == a + int(np.argmin(values[a : b + 1]))
 
 
+@pytest.mark.parametrize("n", [1, 64, 100])
+def test_rmq_kernel_degenerate_spans(n):
+    """Kernel parity on the spans that stress the two-probe trick:
+    hi == lo (span 1), the full array (top-level k when n is a power of
+    two), and spans where the second probe's start ``hi - 2^k + 1``
+    coincides with ``lo``."""
+    values = RNG.integers(0, 4, n).astype(np.int32)
+    st = rmq_build(values)
+    lo = [i for i in range(n)] + [0]
+    hi = [i for i in range(n)] + [n - 1]
+    k = 1
+    while (1 << k) <= n:
+        span = 1 << k
+        lo += [0, n - span]
+        hi += [span - 1, n - 1]
+        k += 1
+    got = rmq_pallas(
+        st.values, st.table, jnp.asarray(lo, jnp.int32),
+        jnp.asarray(hi, jnp.int32), block_q=64, interpret=True,
+    )
+    for g, a, b in zip(np.asarray(got), lo, hi):
+        assert g == a + int(np.argmin(values[a : b + 1])), (a, b)
+
+
 # ---------------------------------------------------------------------------
 # embedding bag
 # ---------------------------------------------------------------------------
@@ -365,3 +389,167 @@ def test_pair_descent_halves_gathers():
     np.testing.assert_array_equal(
         np.asarray(rh_p), np.asarray(wm_rank_batch(wm, c, hi))
     )
+
+
+# ---------------------------------------------------------------------------
+# fused ILCP document listing
+# ---------------------------------------------------------------------------
+
+
+def _ilcp_fixture(seed=13):
+    """A repetitive versioned collection with pattern-derived SA ranges —
+    the ILCP recursion's completeness (Lemma 3) holds on pattern ranges,
+    so ground-truth checks must use real ones, not random intervals."""
+    from repro.core.ilcp import build_ilcp
+    from repro.core.suffix import build_suffix_data, sa_range_for_pattern
+    from repro.data.collections import (
+        SyntheticSpec, generate, random_substring_patterns,
+    )
+
+    coll = generate(SyntheticSpec(
+        "version", n_base=2, n_variants=6, base_len=80,
+        mutation_rate=0.02, seed=seed,
+    ))
+    data = build_suffix_data(coll)
+    index = build_ilcp(data)
+    pats = random_substring_patterns(coll, 300, 5, 32)
+    ranges = [sa_range_for_pattern(data, p) for p in pats]
+    ranges += [(0, 0), (5, 5), (7, 3)]  # empty + inverted ranges
+    lo = jnp.asarray([r[0] for r in ranges], jnp.int32)
+    hi = jnp.asarray([r[1] for r in ranges], jnp.int32)
+    return coll, data, index, jnp.asarray(data.da), lo, hi
+
+
+def _list_launches(fn, *args):
+    # fresh wrapper per call: make_jaxpr caches on (fn identity, avals),
+    # and these tests re-trace the same fn after flipping a module global
+    fresh = lambda *a: fn(*a)  # noqa: E731
+    return count_primitive(jax.make_jaxpr(fresh)(*args).jaxpr, "pallas_call")
+
+
+@pytest.mark.parametrize("max_df,block_q", [(2, 128), (8, 4), (64, 128)])
+def test_ilcp_list_kernel_parity(max_df, block_q):
+    """Kernel vs lockstep oracle vs the vmapped Fig-1 recursion: all three
+    bit-identical (same documents in the same discovery order), and the
+    distinct-document sets match numpy ground truth on pattern SA ranges —
+    including df > max_df truncation at small max_df and odd batch shapes
+    (B not a multiple of block_q)."""
+    from repro.core.ilcp import ilcp_list_docs_da_batch
+
+    coll, data, index, da, lo, hi = _ilcp_fixture()
+    kw = dict(d=coll.d, max_df=max_df)
+    docs_k, cnt_k = ops.ilcp_list(
+        index.vilcp, index.rmq.table, index.run_starts, da, lo, hi,
+        block_q=block_q, interpret=True, **kw,
+    )
+    lo_run = ops.runs_of(index.run_starts, lo)
+    hi_run = ops.runs_of(index.run_starts, hi - 1)
+    docs_o, cnt_o = ref.ilcp_list_ref(
+        index.vilcp, index.rmq.table, index.run_starts, da, lo, hi,
+        lo_run, hi_run, **kw,
+    )
+    docs_v, cnt_v = ilcp_list_docs_da_batch(index, da, lo, hi, max_df)
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_o))
+    np.testing.assert_array_equal(np.asarray(docs_k), np.asarray(docs_o))
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_v))
+    np.testing.assert_array_equal(
+        np.asarray(docs_k), np.asarray(docs_v)[:, :max_df]
+    )
+
+    danp = np.asarray(data.da)
+    for i in range(lo.shape[0]):
+        a, b = int(lo[i]), int(hi[i])
+        truth = sorted(set(danp[a:b].tolist())) if a < b else []
+        got = np.asarray(docs_k)[i, : int(cnt_k[i])].tolist()
+        assert len(set(got)) == len(got), "duplicate docs reported"
+        if len(truth) <= max_df:
+            assert sorted(got) == truth, (a, b)
+        else:
+            assert int(cnt_k[i]) == max_df
+            assert set(got) <= set(truth), (a, b)
+
+
+def test_ilcp_list_launch_and_fallbacks(monkeypatch):
+    """Launch-count + fallback contract of the ``ops.ilcp_list`` wrapper:
+    ONE pallas_call on the kernel path; zero for B == 0, max_df == 0, and
+    a pinched VMEM budget — each fallback bit-identical to the kernel."""
+    coll, data, index, da, lo, hi = _ilcp_fixture()
+
+    def run(l, h, max_df=8):
+        return ops.ilcp_list(
+            index.vilcp, index.rmq.table, index.run_starts, da, l, h,
+            d=coll.d, max_df=max_df, interpret=True,
+        )
+
+    assert _list_launches(run, lo, hi) == 1
+    want = run(lo, hi)
+
+    # B == 0: no launch, empty outputs
+    e = jnp.zeros(0, jnp.int32)
+    assert _list_launches(run, e, e) == 0
+    docs0, cnt0 = run(e, e)
+    assert docs0.shape == (0, 8) and cnt0.shape == (0,)
+
+    # max_df == 0 routes to the oracle
+    assert _list_launches(lambda a, b: run(a, b, max_df=0), lo, hi) == 0
+
+    # over the VMEM budget: same integers through the oracle, no launch
+    monkeypatch.setattr(ops, "ILCP_LIST_VMEM_BUDGET", 1)
+    assert _list_launches(run, lo, hi) == 0
+    got = run(lo, hi)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_ilcp_list_rmq_kernel_fallback():
+    """Satellite wiring: the XLA fallback recursion can batch its RMQ
+    probes through the orphaned Pallas RMQ kernel (one launch — the RMQ
+    inside the loop body) and stays bit-identical to the plain path."""
+    from repro.core.ilcp import ilcp_list_docs_da_batch
+
+    coll, data, index, da, lo, hi = _ilcp_fixture()
+    plain = ilcp_list_docs_da_batch(index, da, lo, hi, 8)
+    rmqk = ilcp_list_docs_da_batch(index, da, lo, hi, 8, use_rmq_kernel=True)
+    for g, w in zip(rmqk, plain):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    n = _list_launches(
+        lambda a, b: ilcp_list_docs_da_batch(
+            index, da, a, b, 8, use_rmq_kernel=True
+        ),
+        lo, hi,
+    )
+    assert n == 1
+
+
+def test_ilcp_list_oob_range_stays_empty():
+    """Degenerate SA bounds past the array ends must not fabricate
+    documents — the kernel clips its gathers, so cnt stays 0 for empty
+    and inverted ranges even at the extremes."""
+    coll, data, index, da, _, _ = _ilcp_fixture()
+    n = int(da.shape[0])
+    lo = jnp.asarray([0, n, n - 1, 17], jnp.int32)
+    hi = jnp.asarray([0, n, n - 1, 2], jnp.int32)
+    docs, cnt = ops.ilcp_list(
+        index.vilcp, index.rmq.table, index.run_starts, da, lo, hi,
+        d=coll.d, max_df=8, interpret=True,
+    )
+    assert np.asarray(cnt).tolist() == [0, 0, 0, 0]
+    assert np.all(np.asarray(docs) == -1)
+
+
+def test_list_endpoint_two_launches():
+    """The list endpoint's launch-count contract at the program level:
+    kernel path = exactly TWO pallas_calls (fused backward search + fused
+    listing), XLA path = zero, and the two programs agree end to end."""
+    from repro.data.collections import SyntheticSpec, generate
+    from repro.serve.retrieval import RetrievalService
+
+    coll = generate(SyntheticSpec(
+        "version", n_base=2, n_variants=4, base_len=60,
+        mutation_rate=0.01, seed=7,
+    ))
+    svc = RetrievalService.build(coll, validate=False)
+    on = svc.trace_endpoint("list", use_kernel=True, use_list_kernel=True)
+    off = svc.trace_endpoint("list", use_kernel=False, use_list_kernel=False)
+    assert count_primitive(on.jaxpr, "pallas_call") == 2
+    assert count_primitive(off.jaxpr, "pallas_call") == 0

@@ -256,3 +256,34 @@ def test_empty_batch():
     assert svc.topk([]) == []
     assert svc.tfidf([]) == []
     assert svc.count([]).shape == (0,)
+
+
+def test_list_kernel_service_parity_oob_and_compile():
+    """A ``use_list_kernel=True`` service answers bit-identically to the
+    reference path — including patterns with out-of-alphabet symbols,
+    which must stay empty through the fused listing kernel — and keeps
+    the one-compile-per-bucket discipline."""
+    import numpy as np
+
+    coll = generate(SPECS["version"])
+    svc = RetrievalService.build(
+        coll, block_size=16, beta=8.0, brute_window=MAX_BUF,
+        use_list_kernel=True,
+    )
+    assert svc.use_list_kernel is True
+    pats = random_substring_patterns(coll, 200, 5, 12)
+    pats_oob = pats[:6] + [np.asarray([coll.sigma + 3, 1, 2], np.int32)]
+    for eng in ("auto", "ilcp", "brute", "pdl"):
+        got = svc.list_docs(pats_oob, max_df=32, engine=eng, max_buf=MAX_BUF)
+        want = svc.list_docs(
+            pats_oob, max_df=32, max_buf=MAX_BUF,
+            engine="reference" if eng == "auto" else f"reference:{eng}",
+        )
+        assert got == want, eng
+        assert got[-1] == [], "OOB symbol must produce an empty answer"
+
+    before = svc.compile_counts["list"]
+    svc.list_docs(pats[:5], max_df=32, max_buf=MAX_BUF)
+    svc.list_docs(pats[:7], max_df=32, max_buf=MAX_BUF)
+    assert svc.compile_counts["list"] == before, \
+        "same bucket must not recompile on the listing-kernel backend"

@@ -323,3 +323,47 @@ def test_runtime_fault_injection_degrades_to_sharded_reference(setup):
         answers = rt.serve([("list", p) for p in pats[:3]])
     assert all(a.degraded for a in answers)
     assert [a.result for a in answers] == ref
+
+
+def test_list_kernel_restored_when_sharded(setup, monkeypatch):
+    """Listing-kernel counterpart of the restoration contract: with the
+    listing VMEM budget pinched between the per-shard and the global
+    footprint (resident tables + tiles + scratch), the unsharded list
+    program loses its listing launch while the sharded program keeps one
+    fused listing launch per shard — and both kernels together make the
+    per-shard launch count 2S."""
+    coll, base, svc, pats = setup
+    from repro.analysis.jaxpr import count_primitive
+
+    def list_bytes(s):
+        return ops.block_meta_bytes(ops.ilcp_list_block_meta(
+            s.ilcp.vilcp, s.ilcp.rmq.table, s.ilcp.run_starts, s.da,
+            batch=8, d=s.ilcp.d, max_df=64,
+        ))
+
+    global_bytes = list_bytes(base)
+    shard_bytes = max(list_bytes(sh) for sh in svc.shards)
+    assert shard_bytes < global_bytes
+    budget = (shard_bytes + global_bytes) // 2
+    monkeypatch.setattr(ops, "ILCP_LIST_VMEM_BUDGET", budget)
+
+    unsharded = base.trace_endpoint(
+        "list", use_kernel=False, use_list_kernel=True
+    )
+    assert count_primitive(unsharded, "pallas_call") == 0  # over budget
+    sharded = svc.trace_endpoint(
+        "list", use_kernel=False, use_list_kernel=True
+    )
+    assert count_primitive(sharded, "pallas_call") == svc.n_shards
+    both = svc.trace_endpoint("list", use_kernel=True, use_list_kernel=True)
+    assert count_primitive(both, "pallas_call") == 2 * svc.n_shards
+
+    # end to end through both kernels: same answers as the reference
+    svc_k = ShardedRetrievalService.build(
+        coll, svc.mesh, block_size=16, beta=8.0,
+        use_search_kernel=True, use_list_kernel=True, validate=False,
+    )
+    few = pats[:4]
+    want = base.list_docs(few, max_df=_maxdf(coll), engine="reference",
+                          max_buf=4096)
+    assert svc_k.list_docs(few, max_df=_maxdf(coll), max_buf=4096) == want

@@ -268,6 +268,26 @@ def test_rmq_property(values, data):
     assert int(rmq_query(rmq, lo, hi)) == oracle_rmq_leftmost(values, lo, hi)
 
 
+@pytest.mark.parametrize("n", [1, 2, 64, 100])
+def test_rmq_degenerate_spans(n):
+    """The spans the flattened-table kernels must not get wrong: single
+    positions (hi == lo, span 1 -> k = 0), the full array (top-level k for
+    power-of-two n, where the two table probes coincide), and every
+    power-of-two span length where ``hi - 2^k + 1`` equals ``lo`` exactly."""
+    values = RNG.integers(0, 4, n)  # ties force the leftmost rule to matter
+    rmq = rmq_build(values)
+    for lo in range(n):
+        assert int(rmq_query(rmq, lo, lo)) == lo
+    assert int(rmq_query(rmq, 0, n - 1)) == oracle_rmq_leftmost(values, 0, n - 1)
+    k = 1
+    while (1 << k) <= n:
+        span = 1 << k
+        for lo in (0, n - span):
+            got = int(rmq_query(rmq, lo, lo + span - 1))
+            assert got == oracle_rmq_leftmost(values, lo, lo + span - 1)
+        k += 1
+
+
 def test_modeled_bits_sane():
     bits = (RNG.random(10_000) < 0.01).astype(np.uint8)
     plain = plain_from_bits(bits).modeled_bits()
